@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2 fig7 ...] [--fast]
+"""
+import argparse
+import sys
+
+from . import figures
+
+
+ALL = {
+    "fig2": figures.fig2_scaling_cores,
+    "fig3": figures.fig3_scaling_data,
+    "fig4": figures.fig4_parity,
+    "fig5": figures.fig5_load_distribution,
+    "fig7": figures.fig7_node_failure,
+    "usps": figures.usps_reconstruction,
+    "psi2": figures.psi2_variants,
+    "lm": figures.lm_train_microbench,
+}
+
+FAST_ARGS = {
+    "fig2": dict(n=4000, iters=2),
+    "fig3": dict(iters=2),
+    "fig4": dict(n=200, iters=40),
+    "fig5": dict(n=8000, iters=3),
+    "fig7": dict(n=150, iters=40),
+    "usps": dict(n_small=150, n_big=500, iters=50),
+    "psi2": dict(n=2048, iters=2),
+    "lm": dict(steps=3),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    rows = []
+    for name in names:
+        print(f"== {name} ==")
+        kwargs = FAST_ARGS.get(name, {}) if args.fast else {}
+        try:
+            rows.extend(ALL[name](**kwargs))
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rows.append((f"{name}/FAILED", 0.0, repr(e)))
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.3f},{r[2]}")
+    if any("FAILED" in r[0] for r in rows):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

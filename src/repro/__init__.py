@@ -1,0 +1,12 @@
+"""repro — distributed variational sparse-GP/GPLVM inference (NIPS 2014)
+plus the multi-arch LM substrate and TPU launch/roofline tooling.
+
+GP inference follows the paper in float64 (collapsed-bound Cholesky math is
+ill-conditioned in f32); x64 is enabled globally and the LM substrate passes
+explicit f32/bf16 dtypes everywhere.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from . import checkpoint
+from .checkpoint import AsyncCheckpointer, latest, restore, save

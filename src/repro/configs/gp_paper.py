@@ -1,0 +1,35 @@
+"""The paper's own workload configs (sparse GP / GPLVM).
+
+These drive the GP dry-run cells and the paper-reproduction benchmarks.
+Sizes follow the paper's experiments: oil-flow (1k x 12), the 100k-point
+synthetic sines dataset, full USPS (4649 x 256, m=150) and a stretch
+1M-point regression showing the 512-chip scaling headroom.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GPConfig:
+    name: str
+    n: int             # data points
+    d: int             # output dims
+    q: int             # latent / input dims
+    m: int             # inducing points
+    latent: bool       # GPLVM (True) or regression (False)
+    source: str = ""
+
+
+GP_CONFIGS: dict[str, GPConfig] = {
+    c.name: c for c in [
+        GPConfig("gplvm-oilflow", n=1000, d=12, q=10, m=50, latent=True,
+                 source="paper fig.4 (Titsias & Lawrence oil-flow)"),
+        GPConfig("gplvm-synth-100k", n=100_000, d=3, q=2, m=100, latent=True,
+                 source="paper §4.2-4.3 scaling dataset"),
+        GPConfig("gplvm-usps", n=4649, d=256, q=10, m=150, latent=True,
+                 source="paper §4.5 USPS"),
+        GPConfig("sgpr-synth-1m", n=1_000_000, d=4, q=8, m=512, latent=False,
+                 source="beyond-paper scale point (512-chip headroom)"),
+    ]
+}

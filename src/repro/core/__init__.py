@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — re-parametrised distributed variational
+inference for sparse GP regression and the Bayesian GPLVM.
+
+Public API:
+  gp_kernels     SE-ARD kernel + closed-form psi statistics
+  stats          per-shard partial sufficient statistics (the "map")
+  bound          collapsed bound (paper eq. 3.3), optimal q(u), prediction
+  distributed    shard_map Map-Reduce engine (the "reduce" + global step)
+  sgpr, gplvm    sequential model classes (GPy-analogue reference engines)
+  scg            scaled conjugate gradient (Moller 1993)
+  ref_naive      O(n^3) oracles for tests
+"""
+from . import bound, distributed, gp_kernels, init_utils, ref_naive, scg, stats
+from .bound import QU, collapsed_bound, optimal_qu, predict
+from .distributed import DistributedGP
+from .gplvm import BayesianGPLVM
+from .sgpr import SGPR
+from .stats import Stats, partial_stats
+
+__all__ = [
+    "bound", "distributed", "gp_kernels", "init_utils", "ref_naive", "scg",
+    "stats", "QU", "collapsed_bound", "optimal_qu", "predict",
+    "DistributedGP", "BayesianGPLVM", "SGPR", "Stats", "partial_stats",
+]

@@ -1,0 +1,207 @@
+"""Distributed Map-Reduce inference engine (paper §3.2) on a JAX mesh.
+
+The paper's two global steps per iteration map onto one SPMD program:
+
+  map    : every shard computes partial stats (A_k, B_k, C_k, D_k, KL_k)
+           from its local (Y_k, mu_k, S_k) — zero communication, O(n_k m^2 q).
+  reduce : one ``lax.psum`` over the data axes — O(m^2 + m d) bytes,
+           independent of n (the paper's "constant time" global step).
+  global : every chip evaluates the collapsed bound from the reduced stats
+           (replicated O(m^3) — trivial, and it removes the central node).
+
+Gradients come from ``jax.grad`` through the same program: the transpose of
+a psum is replication, so the backward pass is also one constant-size
+collective + shard-local work — exactly the paper's step-3 scatter of
+(F, dF) to the end-point nodes.
+
+Node failure (paper §5.2): a per-shard ``failure_mask`` zeroes a shard's
+contribution inside the reduce.  ``failure_mode``:
+  * "drop"    — paper-faithful: surviving partial sums used as-is (noisy
+                gradient; the bound's n-terms keep the full n).
+  * "rescale" — beyond-paper: surviving sums scaled by n/n_live, keeping the
+                statistics approximately unbiased (see benchmarks/fig7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .bound import collapsed_bound
+from .stats import Stats, partial_stats
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    _shard_map_impl = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_impl  # type: ignore
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map with replication checking disabled."""
+    try:
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    except TypeError:  # pragma: no cover - older kwarg name
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+
+Array = jax.Array
+
+
+def _flat_shard_index(mesh: Mesh, axis_names: Sequence[str]) -> Array:
+    """Flattened shard index along ``axis_names`` (row-major)."""
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axis_names:
+        idx = idx * mesh.shape[ax] + lax.axis_index(ax)
+    return idx
+
+
+def num_shards(mesh: Mesh, axis_names: Sequence[str]) -> int:
+    out = 1
+    for ax in axis_names:
+        out *= mesh.shape[ax]
+    return out
+
+
+def pad_and_shard(arrs: dict, n_shards: int):
+    """Pad leading dim to a multiple of n_shards; return arrays + weight vec.
+
+    The weight vector is 1 on real rows, 0 on padding — padding therefore
+    contributes nothing to any statistic (see ``stats.partial_stats``).
+    Runs on host (numpy in, numpy out) before device_put.
+    """
+    import numpy as np
+
+    n = next(iter(arrs.values())).shape[0]
+    pad = (-n) % n_shards
+    out = {}
+    for k, a in arrs.items():
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        # Pad q(X) variances with 1s (log-safe); everything else with 0s.
+        cval = 1.0 if k in ("s", "S") else 0.0
+        out[k] = np.pad(np.asarray(a), widths, constant_values=cval)
+    w = np.concatenate([np.ones((n,), np.float64), np.zeros((pad,), np.float64)])
+    return out, w
+
+
+class DistributedGP:
+    """Builds jitted distributed bound/grad programs for SGPR and GPLVM."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        data_axes: Sequence[str] = ("data",),
+        latent: bool = False,
+        failure_mode: str = "drop",
+        psi2_fn=None,
+    ):
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.latent = latent
+        self.failure_mode = failure_mode
+        self.psi2_fn = psi2_fn
+        self.n_shards = num_shards(mesh, self.data_axes)
+        self._data_spec = P(self.data_axes)
+        self._rep_spec = P()
+
+    # -- sharding helpers ---------------------------------------------------
+    def data_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self._data_spec)
+
+    def replicated_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self._rep_spec)
+
+    def put_data(self, **arrs):
+        """Pad + shard host arrays onto the mesh. Returns (dict, weights)."""
+        padded, w = pad_and_shard(arrs, self.n_shards)
+        sh = self.data_sharding()
+        out = {k: jax.device_put(jnp.asarray(v), sh) for k, v in padded.items()}
+        wdev = jax.device_put(jnp.asarray(w), sh)
+        return out, wdev
+
+    # -- the SPMD program ---------------------------------------------------
+    def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d):
+        """Runs per-shard under shard_map. Returns the (replicated) bound."""
+        idx = _flat_shard_index(self.mesh, self.data_axes)
+        alive = fmask[idx]
+        w = w * alive
+
+        st = partial_stats(
+            hyp, z, y, mu, s,
+            weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
+        )
+        # --- the reduce: constant-size collective, independent of n --------
+        st = Stats(*(lax.psum(t, self.data_axes) for t in st))
+
+        if self.failure_mode == "rescale":
+            live_frac = st.n / n_full
+            st = Stats(
+                A=st.A / live_frac, B=st.B / live_frac, C=st.C / live_frac,
+                D=st.D / live_frac, KL=st.KL / live_frac, n=n_full,
+            )
+        else:  # "drop" (paper) — keep sums as-is, n-terms use the full n
+            st = st._replace(n=n_full)
+        return collapsed_bound(hyp, z, st, d)
+
+    def bound_fn(self, d: int):
+        """Replicated-output distributed bound: (hyp, z, y, mu, s, w, fmask, n)->()."""
+        f = shard_map(
+            functools.partial(self._shard_bound, d=d),
+            mesh=self.mesh,
+            in_specs=(
+                self._rep_spec,   # hyp (pytree of scalars/vectors)
+                self._rep_spec,   # z
+                self._data_spec,  # y
+                self._data_spec,  # mu
+                self._data_spec,  # s (None for regression: empty pytree)
+                self._data_spec,  # w
+                self._rep_spec,   # fmask
+                self._rep_spec,   # n_full
+            ),
+            out_specs=self._rep_spec,
+        )
+        return f
+
+    def make_value_and_grad(self, d: int, argnums=(0, 1)):
+        """Jitted (value, grad) of the NEGATIVE bound wrt chosen args.
+
+        argnums indexes (hyp, z, mu, s): for SGPR use (0, 1); for GPLVM add
+        mu and s — their gradients stay sharded with the data (the paper's
+        local-parameter optimisation, no extra communication).
+        """
+        bound = self.bound_fn(d)
+
+        def neg(hyp, z, mu, s, y, w, fmask, n_full):
+            return -bound(hyp, z, y, mu, s, w, fmask, n_full)
+
+        return jax.jit(jax.value_and_grad(neg, argnums=argnums))
+
+    def reduced_stats(self, d: int):
+        """Jitted program returning the globally-reduced Stats (for q(u)/predict)."""
+
+        def _stats(hyp, z, y, mu, s, w, fmask):
+            idx = _flat_shard_index(self.mesh, self.data_axes)
+            w = w * fmask[idx]
+            st = partial_stats(
+                hyp, z, y, mu, s,
+                weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
+            )
+            return Stats(*(lax.psum(t, self.data_axes) for t in st))
+
+        f = shard_map(
+            _stats,
+            mesh=self.mesh,
+            in_specs=(
+                self._rep_spec, self._rep_spec, self._data_spec,
+                self._data_spec, self._data_spec, self._data_spec, self._rep_spec,
+            ),
+            out_specs=self._rep_spec,
+        )
+        return jax.jit(f)

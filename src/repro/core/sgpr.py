@@ -1,0 +1,89 @@
+"""Sparse GP regression (Titsias 2009) via the paper's re-parametrised bound.
+
+The regression model is the paper's unifying special case: q(X) variance
+pinned to 0, mean pinned to the observed inputs, KL term absent. One code
+path (``stats.partial_stats`` + ``bound.collapsed_bound``) serves both this
+and the GPLVM.
+
+This class is the *sequential* reference engine (single device, the GPy
+analogue); ``core.distributed.DistributedGP`` runs the same math sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from . import bound as bound_mod
+from . import init_utils
+from .scg import scg
+from .stats import partial_stats
+
+
+class SGPR:
+    """Sparse GP regression with SE-ARD kernel and inducing points Z."""
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, num_inducing: int = 50,
+                 hyp: dict | None = None, z: np.ndarray | None = None,
+                 jitter: float = 1e-6, seed: int = 0):
+        self.x = jnp.asarray(x, jnp.float64)
+        self.y = jnp.asarray(y, jnp.float64)
+        self.n, self.q = x.shape
+        self.d = y.shape[1]
+        self.jitter = jitter
+        z0 = init_utils.kmeans(np.asarray(x), num_inducing, seed=seed) if z is None else z
+        hyp0 = init_utils.default_hyp(np.asarray(y), self.q) if hyp is None else hyp
+        self.params = {
+            "hyp": {k: jnp.asarray(v, jnp.float64) for k, v in hyp0.items()},
+            "z": jnp.asarray(z0, jnp.float64),
+        }
+        self._stats_cache = None
+
+        def neg_bound(params, x_, y_):
+            st = partial_stats(params["hyp"], params["z"], y_, x_, s=None, latent=False)
+            return -bound_mod.collapsed_bound(params["hyp"], params["z"], st, self.d,
+                                              jitter=self.jitter)
+
+        self._neg_vg = jax.jit(jax.value_and_grad(neg_bound))
+
+    # -- objective ----------------------------------------------------------
+    def log_bound(self, params=None) -> float:
+        params = self.params if params is None else params
+        v, _ = self._neg_vg(params, self.x, self.y)
+        return -float(v)
+
+    def fit(self, max_iters: int = 200, verbose: bool = False):
+        flat0, unravel = ravel_pytree(self.params)
+
+        def fg(xf):
+            p = unravel(jnp.asarray(xf))
+            v, g = self._neg_vg(p, self.x, self.y)
+            gf, _ = ravel_pytree(g)
+            return float(v), np.asarray(gf, np.float64)
+
+        res = scg(fg, np.asarray(flat0, np.float64), max_iters=max_iters)
+        self.params = jax.tree.map(jnp.asarray, unravel(jnp.asarray(res.x)))
+        self._stats_cache = None
+        if verbose:
+            print(f"SGPR fit: bound={-res.f:.4f} iters={res.n_iters} "
+                  f"evals={res.n_evals} converged={res.converged}")
+        return res
+
+    # -- posterior ----------------------------------------------------------
+    def _stats(self):
+        if self._stats_cache is None:
+            self._stats_cache = partial_stats(
+                self.params["hyp"], self.params["z"], self.y, self.x,
+                s=None, latent=False)
+        return self._stats_cache
+
+    def qu(self) -> bound_mod.QU:
+        return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],
+                                    self._stats(), jitter=self.jitter)
+
+    def predict(self, xstar: np.ndarray, include_noise: bool = False):
+        mean, var = bound_mod.predict(
+            self.params["hyp"], self.params["z"], self.qu(),
+            jnp.asarray(xstar, jnp.float64), include_noise=include_noise)
+        return np.asarray(mean), np.asarray(var)

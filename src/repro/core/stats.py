@@ -1,0 +1,103 @@
+"""Partial sufficient statistics — the paper's Map step.
+
+Each worker holds a shard ``(Y_k, mu_k, S_k)`` (regression: ``S_k = 0``,
+``mu_k = X_k``) and computes
+
+    A_k  = Sum_i Y_i Y_i^T            (scalar)
+    B_k  = Sum_i psi0_i               (scalar)
+    C_k  = Psi1_k^T Y_k               (m, d)
+    D_k  = Sum_i psi2_i               (m, m)
+    KL_k = Sum_i KL(q(X_i) || p(X_i)) (scalar)
+
+These are exactly the terms the paper's end-point nodes return to the
+central node (its §3.2 step 2); their size is independent of n.
+
+``weights`` lets callers mask out padded rows (distributed padding) and
+failed nodes (the paper's §5.2 drop-partial-term strategy) without changing
+shapes — a zero weight removes point i from every statistic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gp_kernels as gpk
+
+Array = jax.Array
+
+
+class Stats(NamedTuple):
+    """Sufficient statistics of the collapsed bound. All sums over points."""
+
+    A: Array   # () Frobenius term  Sum Y_i Y_i^T
+    B: Array   # () psi0 sum
+    C: Array   # (m, d) Psi1^T Y
+    D: Array   # (m, m) Psi2
+    KL: Array  # () KL(q(X)||p(X))
+    n: Array   # () effective number of points contributing
+
+    def __add__(self, other: "Stats") -> "Stats":  # type: ignore[override]
+        return Stats(*(a + b for a, b in zip(self, other)))
+
+    def scale(self, c) -> "Stats":
+        return Stats(*(c * t for t in self))
+
+
+def partial_stats(
+    hyp: dict,
+    z: Array,
+    y: Array,
+    mu: Array,
+    s: Array | None = None,
+    weights: Array | None = None,
+    latent: bool = True,
+    psi2_fn=None,
+) -> Stats:
+    """Compute the shard-local statistics (the map function).
+
+    Args:
+      hyp: kernel/noise hyper-parameters (log-space dict).
+      z: (m, q) inducing inputs.
+      y: (n_k, d) outputs on this shard.
+      mu: (n_k, q) q(X) means (== inputs X for regression).
+      s: (n_k, q) q(X) variances, or None for regression (treated as 0).
+      weights: (n_k,) 0/1 mask (padding / failed points). None = all ones.
+      latent: include the KL term (GPLVM) or not (regression).
+      psi2_fn: override for the psi2 accumulation (e.g. the Pallas kernel).
+    """
+    n_k = y.shape[0]
+    w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
+
+    if s is None:
+        # Regression: q(X_i) is a delta at the observed inputs. Use the exact
+        # kernel forms (cheaper + numerically exact) rather than S->0 limits.
+        knm = gpk.ard_kernel(hyp, mu, z)                       # (n, m)
+        a = jnp.sum(w * jnp.sum(y * y, axis=-1))
+        b = jnp.sum(w * gpk.ard_kdiag(hyp, mu))
+        c = knm.T @ (w[:, None] * y)                           # (m, d)
+        d_stat = (knm * w[:, None]).T @ knm                    # (m, m)
+        kl = jnp.zeros((), y.dtype)
+    else:
+        a = jnp.sum(w * jnp.sum(y * y, axis=-1))
+        b = jnp.sum(w * gpk.psi0(hyp, mu, s))
+        p1 = gpk.psi1(hyp, z, mu, s)                           # (n, m)
+        c = p1.T @ (w[:, None] * y)
+        if psi2_fn is None:
+            p2 = gpk.psi2_per_point(hyp, z, mu, s)             # (n, m, m)
+            d_stat = jnp.einsum("i,iab->ab", w, p2)
+        else:
+            d_stat = psi2_fn(hyp, z, mu, s, w)
+        kl_i = 0.5 * jnp.sum(s + mu * mu - jnp.log(s) - 1.0, axis=-1)
+        kl = jnp.sum(w * kl_i) if latent else jnp.zeros((), y.dtype)
+
+    return Stats(A=a, B=b, C=c, D=d_stat, KL=kl, n=jnp.sum(w))
+
+
+def reduce_stats(parts: list[Stats]) -> Stats:
+    """Sequential reduce (the single-host analogue of the paper's reduce)."""
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out

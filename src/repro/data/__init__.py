@@ -1,0 +1,5 @@
+"""Data substrate: synthetic generators matching the paper's experiments and
+a sharded token pipeline for the LM architectures."""
+from . import synthetic, tokens
+
+__all__ = ["synthetic", "tokens"]

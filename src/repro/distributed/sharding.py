@@ -1,0 +1,141 @@
+"""Logical-axis sharding: MaxText-style rules with divisibility fallback.
+
+Every parameter is created together with a tuple of *logical* axis names
+(see models/common.py::param). At launch time the rules below resolve
+logical names to mesh axes; any assignment whose dimension size is not
+divisible by the mesh axis size silently falls back to replication (e.g.
+kv_heads=2 under model=16).
+
+Activation constraints use a module-level mesh context (set by the
+launcher / dry-run); with no context they are identity, so smoke tests and
+single-device runs never touch jax device state.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> preferred mesh axis (order tried first-to-last)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # tensor-parallel dims
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_group": ("model",),   # the H/Hkv group dim of unfused GQA scores
+    "experts": ("model",),
+    "lru": ("model",),
+    "inner": ("model",),       # ssm d_inner / conv channels
+    # fsdp dims (weight shards over the data axis)
+    "embed": ("data",),
+    "moe_mlp": ("data",),
+    "qk": (), "v": (), "rank": (),   # MLA small dims: replicate
+    # never sharded
+    "layers": (), "state": (), "conv": (), "pos": (), "frames": (),
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    "seq_model": ("model",),   # Megatron-style sequence parallelism between blocks
+    # KV-cache sequence dim: prefer model (batch usually owns data); decode
+    # softmax over the sharded S axis costs two small per-layer all-reduces
+    # and cuts per-device cache by the TP degree.
+    "seq_shard": ("model", "data"),
+}
+
+_CTX: dict[str, Any] = {"mesh": None, "rules": dict(DEFAULT_RULES)}
+
+
+def set_mesh(mesh: Mesh | None, rules: dict | None = None):
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = dict(DEFAULT_RULES) if rules is None else dict(rules)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    old = dict(_CTX)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def _axes_for(logical: str | None, dim_size: int, mesh: Mesh,
+              rules: dict, used: set[str]) -> tuple[str, ...] | None:
+    if logical is None:
+        return None
+    # "name:quantum" — the dim may only be split in units of ``quantum``
+    # (e.g. "heads:128" keeps whole attention heads on one shard).
+    name, _, quantum_s = logical.partition(":")
+    quantum = int(quantum_s) if quantum_s else 1
+    units = dim_size // max(quantum, 1)
+    cand = rules.get(name, ())
+    picked = []
+    size = 1
+    for ax in cand:
+        if ax in used or ax not in mesh.shape:
+            continue
+        if units % (size * mesh.shape[ax]) == 0:
+            picked.append(ax)
+            size *= mesh.shape[ax]
+    return tuple(picked) or None
+
+
+def spec_for(logical_axes: Sequence[str | None], shape: Sequence[int],
+             mesh: Mesh | None = None, rules: dict | None = None) -> P:
+    """Resolve a logical-axis tuple into a PartitionSpec for ``mesh``."""
+    mesh = _CTX["mesh"] if mesh is None else mesh
+    rules = _CTX["rules"] if rules is None else rules
+    if mesh is None:
+        return P()
+    used: set[str] = set()
+    entries = []
+    for name, dim in zip(logical_axes, shape):
+        axes = _axes_for(name, dim, mesh, rules, used)
+        if axes:
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def axis_divides(logical: str, size: int) -> bool:
+    """True iff ``size`` is divisible by the mesh extent mapped to
+    ``logical`` (False when no mesh/axis — caller should skip constraints
+    rather than pin XLA to a worse layout)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return False
+    ext = 1
+    for ax in _CTX["rules"].get(logical, ()):
+        if ax in mesh.shape:
+            ext *= mesh.shape[ax]
+    return ext > 1 and size % ext == 0
+
+
+def constrain(x, logical_axes: Sequence[str | None]):
+    """with_sharding_constraint against the context mesh (identity if none)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a logical-axes tree + matching ShapeDtypeStruct tree to
+    NamedShardings (for jit in_shardings / device_put)."""
+
+    def one(logical, sds):
+        return NamedSharding(mesh, spec_for(logical, sds.shape, mesh, rules))
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

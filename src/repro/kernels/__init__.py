@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper-optimised hot spots.
+
+psi_stats        — the paper's Map-step (O(n m^2 q)) as MXU matmuls
+flash_attention  — streaming-softmax attention for LM prefill
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+padding, backend select), ref.py (pure-jnp oracle).
+"""

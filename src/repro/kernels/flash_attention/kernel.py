@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (streaming softmax) for LM prefill.
+
+Grid (batch, q_heads, q_blocks, kv_blocks) with the kv dimension innermost;
+running max / normaliser / accumulator live in VMEM scratch across kv steps
+(the classic online-softmax recurrence). GQA is handled for free in the
+BlockSpec index_map: kv operands index head ``h // group`` so grouped KV is
+never materialised per q-head.
+
+Causal masking skips fully-masked kv blocks via ``pl.when`` (no compute
+issued for the upper triangle beyond the diagonal block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               kv_len: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        # mask: causal upper triangle and kv padding beyond kv_len
+        col = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+        valid = col < kv_len
+        if causal:
+            # queries are suffix-aligned to the kv axis (decode convention):
+            # query row r attends to cols <= r + q_offset
+            row = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            valid = valid & (col <= row + q_offset)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot(
+            p, v, precision=jax.lax.Precision.HIGHEST)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # Skip kv blocks entirely above the diagonal of this q block.
+        pl.when((ki * block_k) <= (qi * block_q + block_q - 1 + q_offset))(_step)
+    else:
+        _step()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    kv_len: int | None = None, q_len: int | None = None,
+                    interpret: bool = False):
+    """q: (B, H, T, Dh); k/v: (B, Hkv, S, Dh) with H % Hkv == 0. -> (B, H, T, Dh).
+
+    Pre-padded: T % block_q == 0, S % block_k == 0 handled by ops.py;
+    ``kv_len``/``q_len`` are the TRUE lengths — masking makes padding inert.
+    Causal queries are suffix-aligned: true query row r sees kv cols
+    <= r + (kv_len - q_len).
+    """
+    b, h, t, dh = q.shape
+    _, hkv, s_len, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    kv_len = s_len if kv_len is None else kv_len
+    q_len = t if q_len is None else q_len
+    q_offset = kv_len - q_len
+    grid = (b, h, t // block_q, s_len // block_k)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_len=kv_len, q_offset=q_offset)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd wrapper: padding + backend selection for the flash kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """Padded/sliced flash attention. q (B,H,T,Dh), kv (B,Hkv,S,Dh)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    t, s_len = q.shape[2], k.shape[2]
+    pad_t = (-t) % block_q
+    pad_s = (-s_len) % block_k
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    out = _k.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                             block_k=block_k, kv_len=s_len, q_len=t,
+                             interpret=interpret)
+    return out[:, :, :t, :]

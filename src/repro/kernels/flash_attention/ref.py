@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention (materialised softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B,H,T,Dh); k/v: (B,Hkv,S,Dh). Dense reference in f32."""
+    b, h, t, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if causal:
+        tt, ss = s.shape[-2:]
+        mask = jnp.tril(jnp.ones((tt, ss), bool), k=ss - tt)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vr.astype(jnp.float32)).astype(q.dtype)

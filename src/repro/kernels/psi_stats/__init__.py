@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ops import psi1, psi2, psi2_fn_for_engine
+
+__all__ = ["kernel", "ops", "ref", "psi1", "psi2", "psi2_fn_for_engine"]

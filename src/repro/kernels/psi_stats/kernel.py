@@ -1,0 +1,147 @@
+"""Pallas TPU kernels for the psi-statistics map step — the paper's hot spot.
+
+The paper's cost model for the map step is O(n m^2 q) elementwise work per
+data shard (their §2.1/§3.2). A mechanical port would materialise the
+(n, m, m, q) broadcast — hostile to both VMEM and the MXU. We instead
+re-factor the exponent so the inner loops become matrix multiplies
+(TPU-native, MXU-aligned), which is the hardware adaptation of the paper's
+insight:
+
+  psi2 exponent (per point i, inducing pair (a,b), latent dim q):
+    E[i,ab] = static[ab] + lognorm_i - sum_q (mu_iq - zbar_abq)^2 / den_iq
+    with den_iq = ell_q^2 + 2 s_iq, zbar = (z_a + z_b)/2.
+  Expanding the square decouples i from (ab):
+    E = alpha_i + M_i. @ Zb.ab,
+    M  = [2 mu/den, -1/den]               (n, 2q)
+    Zb = [zbar; zbar^2] (per ab column)   (2q, m^2)
+  so the kernel is two MXU matmuls + exp + one reduce matmul (w^T exp(E)),
+  tiled (block_n x block_m x block_m) so every operand lives in VMEM.
+
+psi1 uses the same trick one order lower.
+
+Tiling contract (enforced/padded by ops.py):
+  n % block_n == 0, m % block_m == 0, q % q_pad == 0, all >= TPU lane rules.
+  q is padded NEUTRALLY: padded dims carry mu=s=z=0, ell2=1, which
+  contributes exactly 0 to every exponent term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# psi2: D = sum_i w_i <K_mi K_im>  — grid (a_tiles, b_tiles, n_tiles)
+# ---------------------------------------------------------------------------
+
+def _psi2_kernel(ell2_ref, sf4_ref, za_ref, zb_ref, mu_ref, s_ref, w_ref,
+                 out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ell2 = ell2_ref[0, :]                      # (q,)
+    mu = mu_ref[...]                           # (bn, q)
+    s = s_ref[...]                             # (bn, q)
+    w = w_ref[...]                             # (bn, 1)
+    za = za_ref[...]                           # (bm, q)
+    zb = zb_ref[...]                           # (bm, q)
+    bm = za.shape[0]
+
+    den = ell2[None, :] + 2.0 * s              # (bn, q)
+    inv_den = 1.0 / den
+    # lognorm_i = -0.5 sum_q log(den/ell2)
+    lognorm = -0.5 * jnp.sum(jnp.log(den) - jnp.log(ell2)[None, :], axis=1)
+    alpha = lognorm - jnp.sum(mu * mu * inv_den, axis=1)          # (bn,)
+    m_mat = jnp.concatenate([2.0 * mu * inv_den, -inv_den], axis=1)  # (bn, 2q)
+
+    zbar = 0.5 * (za[:, None, :] + zb[None, :, :])                # (bm, bm, q)
+    zb_mat = jnp.concatenate([zbar, zbar * zbar], axis=-1)        # (bm, bm, 2q)
+    zb_mat = zb_mat.reshape(bm * bm, -1).T                        # (2q, bm*bm)
+
+    dz = za[:, None, :] - zb[None, :, :]
+    static = -0.25 * jnp.sum(dz * dz / ell2[None, None, :], axis=-1)
+    static = static.reshape(1, bm * bm)                           # (1, bm*bm)
+
+    e = alpha[:, None] + jax.lax.dot(m_mat, zb_mat,
+                                     precision=jax.lax.Precision.HIGHEST)
+    p = jnp.exp(e + static)                                       # (bn, bm*bm)
+    acc = jax.lax.dot(w.T, p, precision=jax.lax.Precision.HIGHEST)
+    out_ref[...] += sf4_ref[0, 0] * acc.reshape(bm, bm)
+
+
+def psi2_pallas(ell2, sf4, z, mu, s, w, *, block_n=128, block_m=64,
+                interpret=False):
+    """w-weighted Psi2 (m, m). All inputs pre-padded (see ops.py).
+
+    ell2: (1, q) f32; sf4: (1, 1) f32; z: (m, q); mu/s: (n, q); w: (n, 1).
+    """
+    n, q = mu.shape
+    m = z.shape[0]
+    assert n % block_n == 0 and m % block_m == 0
+    grid = (m // block_m, m // block_m, n // block_n)
+    return pl.pallas_call(
+        _psi2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q), lambda a, b, k: (0, 0)),            # ell2
+            pl.BlockSpec((1, 1), lambda a, b, k: (0, 0)),            # sf4
+            pl.BlockSpec((block_m, q), lambda a, b, k: (a, 0)),      # z_a
+            pl.BlockSpec((block_m, q), lambda a, b, k: (b, 0)),      # z_b
+            pl.BlockSpec((block_n, q), lambda a, b, k: (k, 0)),      # mu
+            pl.BlockSpec((block_n, q), lambda a, b, k: (k, 0)),      # s
+            pl.BlockSpec((block_n, 1), lambda a, b, k: (k, 0)),      # w
+        ],
+        out_specs=pl.BlockSpec((block_m, block_m), lambda a, b, k: (a, b)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(ell2, sf4, z, z, mu, s, w)
+
+
+# ---------------------------------------------------------------------------
+# psi1: (n, m) <K_im> — grid (n_tiles, m_tiles)
+# ---------------------------------------------------------------------------
+
+def _psi1_kernel(ell2_ref, sf2_ref, z_ref, mu_ref, s_ref, out_ref):
+    ell2 = ell2_ref[0, :]
+    mu = mu_ref[...]                            # (bn, q)
+    s = s_ref[...]                              # (bn, q)
+    z = z_ref[...]                              # (bm, q)
+
+    den = ell2[None, :] + s
+    inv_den = 1.0 / den
+    lognorm = -0.5 * jnp.sum(jnp.log(den) - jnp.log(ell2)[None, :], axis=1)
+    alpha = lognorm - 0.5 * jnp.sum(mu * mu * inv_den, axis=1)      # (bn,)
+    m_mat = jnp.concatenate([mu * inv_den, -0.5 * inv_den], axis=1)  # (bn, 2q)
+    zb_mat = jnp.concatenate([z, z * z], axis=1).T                   # (2q, bm)
+    e = alpha[:, None] + jax.lax.dot(m_mat, zb_mat,
+                                     precision=jax.lax.Precision.HIGHEST)
+    out_ref[...] = sf2_ref[0, 0] * jnp.exp(e)
+
+
+def psi1_pallas(ell2, sf2, z, mu, s, *, block_n=256, block_m=128,
+                interpret=False):
+    """Psi1 (n, m). Inputs pre-padded."""
+    n, q = mu.shape
+    m = z.shape[0]
+    assert n % block_n == 0 and m % block_m == 0
+    grid = (n // block_n, m // block_m)
+    return pl.pallas_call(
+        _psi1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_m, q), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, q), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, q), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(ell2, sf2, z, mu, s)

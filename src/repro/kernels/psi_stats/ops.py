@@ -1,0 +1,81 @@
+"""jit'd public wrappers around the psi-statistics Pallas kernels.
+
+Handles padding to tile boundaries (all pads are NEUTRAL — padded latent
+dims carry mu=s=z=0, ell2=1; padded data rows carry w=0; padded inducing
+rows are sliced off the output), backend selection (interpret=True off-TPU),
+and the hyper-parameter plumbing from the core library's log-space dict.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def psi2(hyp: dict, z, mu, s, w, block_n: int = 128, block_m: int = 64,
+         interpret: bool | None = None):
+    """Weighted Psi2 = sum_i w_i <K_mi K_im> via the Pallas kernel. (m, m)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m = z.shape[0]
+    f32 = jnp.float32
+    ell2 = jnp.exp(2.0 * hyp["log_ell"]).astype(f32)[None, :]       # (1, q)
+    sf4 = jnp.exp(2.0 * hyp["log_sf2"]).astype(f32)[None, None]     # (1, 1)
+
+    q_pad = 8
+    ell2 = _pad_to(ell2, q_pad, 1, value=1.0)
+    z_p = _pad_to(_pad_to(z.astype(f32), q_pad, 1), block_m, 0)
+    mu_p = _pad_to(_pad_to(mu.astype(f32), q_pad, 1), block_n, 0)
+    s_p = _pad_to(_pad_to(s.astype(f32), q_pad, 1), block_n, 0)
+    w_p = _pad_to(w.astype(f32)[:, None], block_n, 0)
+
+    out = _k.psi2_pallas(ell2, sf4, z_p, mu_p, s_p, w_p,
+                         block_n=block_n, block_m=block_m,
+                         interpret=interpret)
+    return out[:m, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def psi1(hyp: dict, z, mu, s, block_n: int = 256, block_m: int = 128,
+         interpret: bool | None = None):
+    """Psi1 = <K_nm> via the Pallas kernel. (n, m)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, m = mu.shape[0], z.shape[0]
+    f32 = jnp.float32
+    ell2 = jnp.exp(2.0 * hyp["log_ell"]).astype(f32)[None, :]
+    sf2 = jnp.exp(hyp["log_sf2"]).astype(f32)[None, None]
+
+    q_pad = 8
+    ell2 = _pad_to(ell2, q_pad, 1, value=1.0)
+    z_p = _pad_to(_pad_to(z.astype(f32), q_pad, 1), block_m, 0)
+    mu_p = _pad_to(_pad_to(mu.astype(f32), q_pad, 1), block_n, 0)
+    s_p = _pad_to(_pad_to(s.astype(f32), q_pad, 1), block_n, 0)
+
+    out = _k.psi1_pallas(ell2, sf2, z_p, mu_p, s_p,
+                         block_n=block_n, block_m=block_m, interpret=interpret)
+    return out[:n, :m]
+
+
+def psi2_fn_for_engine(block_n: int = 128, block_m: int = 64):
+    """Adapter matching core.stats.partial_stats(psi2_fn=...) signature."""
+
+    def fn(hyp, z, mu, s, w):
+        return psi2(hyp, z, mu, s, w, block_n=block_n, block_m=block_m)
+
+    return fn

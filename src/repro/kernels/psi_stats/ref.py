@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the psi-statistics kernels.
+
+Independent of the Pallas code path; mirrors the closed forms in
+``repro.core.gp_kernels`` (which are themselves validated against
+Monte-Carlo in tests/test_psi_stats.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def psi1_ref(log_sf2, log_ell, z, mu, s):
+    """(n, m) <k(x_i, z_m)>_q."""
+    ell2 = jnp.exp(2.0 * log_ell)
+    sf2 = jnp.exp(log_sf2)
+    denom = ell2[None, :] + s
+    lognorm = -0.5 * jnp.sum(jnp.log1p(s / ell2[None, :]), axis=-1)
+    d = mu[:, None, :] - z[None, :, :]
+    expo = -0.5 * jnp.sum(d * d / denom[:, None, :], axis=-1)
+    return sf2 * jnp.exp(lognorm[:, None] + expo)
+
+
+def psi2_ref(log_sf2, log_ell, z, mu, s, w):
+    """(m, m) weighted Sum_i <k(x_i,z_m) k(x_i,z_m')>_q."""
+    ell2 = jnp.exp(2.0 * log_ell)
+    sf2 = jnp.exp(log_sf2)
+    dz = z[:, None, :] - z[None, :, :]
+    static = -0.25 * jnp.sum(dz * dz / ell2, axis=-1)
+    zbar = 0.5 * (z[:, None, :] + z[None, :, :])
+    denom = ell2[None, :] + 2.0 * s
+    lognorm = -0.5 * jnp.sum(jnp.log1p(2.0 * s / ell2[None, :]), axis=-1)
+    d = mu[:, None, None, :] - zbar[None, :, :, :]
+    expo = -jnp.sum(d * d / denom[:, None, None, :], axis=-1)
+    vals = (sf2 * sf2) * jnp.exp(lognorm[:, None, None] + static[None] + expo)
+    return jnp.einsum("i,iab->ab", w, vals)

@@ -1,0 +1,3 @@
+"""Launch layer: production meshes, multi-pod dry-run, roofline analysis,
+training driver, and report assembly. dryrun.py must stay import-light —
+its first statement pins XLA_FLAGS before jax initialises."""

@@ -1,0 +1,92 @@
+"""Parse collective traffic and cost stats out of a compiled executable.
+
+``cost_analysis()`` has FLOPs and bytes but NOT collective bytes; those are
+regex-harvested from the optimised HLO (``compiled.as_text()`` — post-SPMD
+partitioning, so the collectives are the real ones).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %x = (f32[8,128]{1,0}, f32[4]{0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128|f8e4m3fn|f8e5m2|s4|u4)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (skipping -done ops so
+    async pairs are counted once). Returns {kind: bytes, 'total': bytes,
+    'count': n_ops}."""
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        out[kind] += b
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
+    out["count"] = count
+    return dict(out)
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = dict(ca) if ca else {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,34 @@
+"""Re-run the HLO analyzer over saved .hlo.gz dumps (no recompilation).
+
+  PYTHONPATH=src python -m repro.launch.reanalyze [--mesh single]
+"""
+import argparse
+import gzip
+import json
+import pathlib
+
+from repro.launch.hlo_analyzer import analyze
+from repro.launch.dryrun import ART
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    d = pathlib.Path(ART) / args.mesh
+    for gz in sorted(d.glob("*.hlo.gz")):
+        jp = d / (gz.name[: -len(".hlo.gz")] + ".json")
+        if not jp.exists():
+            continue
+        stats = json.loads(jp.read_text())
+        with gzip.open(gz, "rt") as f:
+            stats["analyzed"] = analyze(f.read())
+        jp.write_text(json.dumps(stats))
+        a = stats["analyzed"]
+        print(f"{gz.name[:-7]:>50}: flops={a['flops']:.3e} "
+              f"bytes={a['bytes']:.3e} "
+              f"coll={a['collectives'].get('total', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

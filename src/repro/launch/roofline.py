@@ -1,0 +1,222 @@
+"""Roofline analysis over the dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--md]
+
+Per (arch x shape) cell, derive the three roofline terms from the
+trip-count-weighted HLO analysis (launch/hlo_analyzer — raw cost_analysis
+counts loop bodies once and is reported for reference only):
+
+  compute    = FLOPs_per_device / peak_FLOPs          [s]
+  memory     = bytes_per_device / HBM_bw              [s]
+  collective = collective_bytes_per_device / link_bw  [s]
+
+Hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+The analyzed numbers come from the per-device SPMD program, so they are
+already per-chip. MODEL_FLOPS = 6*N_active*tokens (train) or
+2*N_active*tokens (fwd-only), and the MODEL/HLO ratio flags remat or
+redundant-compute waste.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link (brief's figure)
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _active_params(cfg) -> tuple[int, int]:
+    """(total params, active-per-token params) from the config, analytic."""
+    d = cfg.d_model
+    v = cfg.vocab_size
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    total = emb
+    active = emb
+    for g in cfg.blocks:
+        per = 0
+        per_active = 0
+        if g.mixer in ("attn", "lattn"):
+            dh = cfg.head_dim or d // cfg.num_heads
+            a = d * cfg.num_heads * dh * 2 + d * cfg.num_kv_heads * dh * 2
+            per += a
+            per_active += a
+        elif g.mixer == "mla":
+            qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            a = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk
+                 + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                 + cfg.kv_lora_rank * cfg.num_heads
+                 * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                 + cfg.num_heads * cfg.v_head_dim * d)
+            per += a
+            per_active += a
+        elif g.mixer == "ssd":
+            d_inner = cfg.ssm_expand * d
+            n = cfg.ssm_state_dim
+            a = d * (2 * d_inner + 2 * n + d_inner // cfg.ssm_head_dim) \
+                + d_inner * d
+            per += a
+            per_active += a
+        elif g.mixer == "rglru":
+            lru = cfg.lru_width or d
+            a = d * lru * 2 + lru * lru * 2 + lru * d
+            per += a
+            per_active += a
+        if g.ffn == "mlp":
+            mult = 3 if cfg.mlp_type == "swiglu" else 2
+            a = mult * d * cfg.d_ff
+            per += a
+            per_active += a
+        elif g.ffn == "moe":
+            routed = 3 * d * cfg.moe_d_ff
+            per += cfg.num_experts * routed + d * cfg.num_experts
+            per_active += cfg.experts_per_token * routed
+            if cfg.num_shared_experts:
+                sh = 3 * d * (cfg.num_shared_experts * cfg.moe_d_ff)
+                per += sh
+                per_active += sh
+        total += per * g.count
+        active += per_active * g.count
+    if cfg.family == "encdec":
+        dh = cfg.head_dim or d // cfg.num_heads
+        enc = cfg.encoder_layers * (
+            d * cfg.num_heads * dh * 2 + d * cfg.num_kv_heads * dh * 2
+            + 2 * d * cfg.d_ff)
+        xattn = sum(g.count for g in cfg.blocks) * (
+            d * cfg.num_heads * dh * 2 + d * cfg.num_kv_heads * dh * 2)
+        total += enc + xattn
+        active += enc + xattn
+    return total, active
+
+
+def model_flops(cfg, shape, n_dev: int) -> float:
+    """Analytic useful FLOPs per device per step (attention included)."""
+    _, act = _active_params(cfg)
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = b * t
+        f = 6.0 * act * tokens
+        f += _attn_flops(cfg, b, t, t, train=True)
+    elif shape.kind == "prefill":
+        tokens = b * t
+        f = 2.0 * act * tokens
+        f += _attn_flops(cfg, b, t, t, train=False)
+    else:  # decode: one token against a length-t cache
+        f = 2.0 * act * b
+        f += _attn_flops(cfg, b, 1, t, train=False)
+    return f / n_dev
+
+
+def _attn_flops(cfg, b, t_q, t_kv, train: bool) -> float:
+    mult = 3.0 if train else 1.0       # fwd + ~2x bwd
+    f = 0.0
+    for g in cfg.blocks:
+        if g.mixer in ("attn", "lattn", "mla"):
+            if g.mixer == "mla":
+                dh_qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                dh_v = cfg.v_head_dim
+            else:
+                dh_qk = dh_v = cfg.head_dim or cfg.d_model // cfg.num_heads
+            kv = t_kv
+            if g.mixer == "lattn" and cfg.local_window:
+                kv = min(cfg.local_window, t_kv)
+            # causal halves the average context for full self-attention
+            eff = kv / 2.0 if (t_q == t_kv and g.mixer != "lattn") else kv
+            f += g.count * 2.0 * b * cfg.num_heads * t_q * eff \
+                * (dh_qk + dh_v) * mult
+    return f
+
+
+def load_cells(mesh: str, variant: str | None = None) -> list[dict]:
+    d = ART / mesh
+    out = []
+    for fp in sorted(d.glob("*.json")):
+        cell = json.loads(fp.read_text())
+        if variant is None or cell.get("variant") in (variant, None):
+            out.append(cell)
+    return out
+
+
+def roofline_row(cell: dict) -> dict:
+    an = cell["analyzed"]
+    fl = an["flops"]
+    by = an["bytes"]
+    co = an["collectives"].get("total", 0.0)
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_l = co / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
+              key=lambda kv: kv[1])
+    row = {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "variant": cell.get("variant", "baseline"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+        "dominant": dom[0], "bound_s": dom[1],
+        "flops_dev": fl, "bytes_dev": by, "coll_dev": co,
+        "raw_cost_flops": cell["cost"]["flops"],
+        "mem_args_GB": cell["memory"].get("argument_size_in_bytes", 0) / 1e9,
+        "mem_temp_GB": cell["memory"].get("temp_size_in_bytes", 0) / 1e9,
+        "n_devices": cell["n_devices"],
+    }
+    # model flops + fraction
+    if cell["arch"].startswith("gp:"):
+        from repro.configs import GP_CONFIGS
+        gp = GP_CONFIGS[cell["arch"][3:]]
+        # paper's map-step cost O(n m^2 q) (+ psi1/grad): value+grad ~ 3x fwd
+        mf = 3.0 * gp.n * gp.m * gp.m * (2.0 * gp.q + 4.0) / cell["n_devices"]
+        row["model_flops_dev"] = mf
+        row["model_over_hlo"] = mf / fl if fl else 0.0
+        row["roofline_frac"] = (mf / PEAK_FLOPS) / dom[1] if dom[1] else 0.0
+    else:
+        from repro.configs import SHAPES, all_configs
+        cfg = all_configs()[cell["arch"]]
+        mf = model_flops(cfg, SHAPES[cell["shape"]], cell["n_devices"])
+        row["model_flops_dev"] = mf
+        row["model_over_hlo"] = mf / fl if fl else 0.0
+        # roofline fraction: useful flops at peak vs the bound time
+        row["roofline_frac"] = (mf / PEAK_FLOPS) / dom[1] if dom[1] else 0.0
+    return row
+
+
+def render_md(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | variant | compute s | memory s | coll s | "
+           "dominant | model/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r.get('model_over_hlo', float('nan')):.2f} "
+            f"| {r.get('roofline_frac', float('nan')):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    from repro.configs import load_all
+    load_all()
+    rows = [roofline_row(c) for c in load_cells(args.mesh, args.variant)]
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    if args.md:
+        print(render_md(rows))
+    else:
+        for r in rows:
+            print(f"{r['arch']:>22} {r['shape']:>12} {r['variant']:>9} "
+                  f"C {r['compute_s']:.2e}  M {r['memory_s']:.2e}  "
+                  f"L {r['collective_s']:.2e}  -> {r['dominant']:<10} "
+                  f"frac {r.get('roofline_frac', float('nan')):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""LM substrate: functional model zoo for the assigned architecture pool."""
+from . import attention, common, mlp, moe, rglru, ssm, transformer

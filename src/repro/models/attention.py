@@ -1,0 +1,328 @@
+"""Attention variants: GQA (+local window), MLA (DeepSeek), cross-attention.
+
+Train/prefill paths are memory-bounded via query-chunked attention (lax.scan
+over query blocks — no (T, S) materialisation) or the Pallas flash kernel
+(cfg.use_flash). Decode paths use single-token KV caches; local-window
+attention uses a rolling O(window) cache; MLA decode uses the absorbed
+formulation against the compressed c_kv cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import axis_divides, constrain
+from .common import ParamBuilder, apply_rope, sub
+
+Array = jax.Array
+NEG_INF = -1.0e30
+
+
+def head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.num_heads
+
+
+# ---------------------------------------------------------------------------
+# parameter creation
+# ---------------------------------------------------------------------------
+
+def init_gqa(pb: ParamBuilder, tree, specs, cfg):
+    dh = head_dim(cfg)
+    hq, hkv = f"heads:{dh}", f"kv_heads:{dh}"
+    t, s = sub(tree, specs, "attn")
+    pb.make(t, s, [], "wq", (cfg.d_model, cfg.num_heads * dh), ("embed", hq))
+    pb.make(t, s, [], "wk", (cfg.d_model, cfg.num_kv_heads * dh),
+            ("embed", hkv))
+    pb.make(t, s, [], "wv", (cfg.d_model, cfg.num_kv_heads * dh),
+            ("embed", hkv))
+    pb.make(t, s, [], "wo", (cfg.num_heads * dh, cfg.d_model), (hq, "embed"))
+    if cfg.qkv_bias:
+        pb.make(t, s, [], "bq", (cfg.num_heads * dh,), (hq,), init="zeros")
+        pb.make(t, s, [], "bk", (cfg.num_kv_heads * dh,), (hkv,), init="zeros")
+        pb.make(t, s, [], "bv", (cfg.num_kv_heads * dh,), (hkv,), init="zeros")
+
+
+def init_mla(pb: ParamBuilder, tree, specs, cfg):
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    t, s = sub(tree, specs, "attn")
+    pb.make(t, s, [], "wq_a", (cfg.d_model, cfg.q_lora_rank), ("embed", "rank"))
+    pb.make(t, s, [], "q_norm", (cfg.q_lora_rank,), (None,), init="zeros")
+    pb.make(t, s, [], "wq_b", (cfg.q_lora_rank, h * qk),
+            ("rank", f"heads:{qk}"))
+    pb.make(t, s, [], "wkv_a",
+            (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+            ("embed", "rank"))
+    pb.make(t, s, [], "kv_norm", (cfg.kv_lora_rank,), (None,), init="zeros")
+    pb.make(t, s, [], "wk_b", (cfg.kv_lora_rank, h * cfg.qk_nope_head_dim),
+            ("rank", f"heads:{cfg.qk_nope_head_dim}"))
+    pb.make(t, s, [], "wv_b", (cfg.kv_lora_rank, h * cfg.v_head_dim),
+            ("rank", f"heads:{cfg.v_head_dim}"))
+    pb.make(t, s, [], "wo", (h * cfg.v_head_dim, cfg.d_model),
+            (f"heads:{cfg.v_head_dim}", "embed"))
+
+
+def init_cross(pb: ParamBuilder, tree, specs, cfg):
+    dh = head_dim(cfg)
+    hq, hkv = f"heads:{dh}", f"kv_heads:{dh}"
+    t, s = sub(tree, specs, "xattn")
+    pb.make(t, s, [], "wq", (cfg.d_model, cfg.num_heads * dh), ("embed", hq))
+    pb.make(t, s, [], "wk", (cfg.d_model, cfg.num_kv_heads * dh),
+            ("embed", hkv))
+    pb.make(t, s, [], "wv", (cfg.d_model, cfg.num_kv_heads * dh),
+            ("embed", hkv))
+    pb.make(t, s, [], "wo", (cfg.num_heads * dh, cfg.d_model), (hq, "embed"))
+
+
+# ---------------------------------------------------------------------------
+# chunked softmax attention core (no (T,S) materialisation)
+# ---------------------------------------------------------------------------
+
+def _attend_chunked(q, k, v, *, causal: bool, window: int | None,
+                    chunk: int = 512):
+    """q: (B,T,H,Dh); k/v: (B,S,Hkv,Dh). Suffix-aligned causal. -> (B,T,H,Dh)."""
+    b, t, h, dh = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                       # may differ (MLA)
+    group = h // hkv
+    scale = dh ** -0.5
+    offset = s_len - t
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // c
+    qs = q.reshape(b, nq, c, h, dh).swapaxes(0, 1)         # (nq, B, c, H, Dh)
+    kg = k.reshape(b, s_len, hkv, 1, dh)
+    vg = v.reshape(b, s_len, hkv, 1, dv)
+    col = jnp.arange(s_len)
+
+    # Constraints are only asserted when H divides the TP extent — pinning
+    # an indivisible layout (qwen2 12H, starcoder2 24H @ TP=16) forces XLA
+    # into full replication and regresses those cells (§Perf iter 10).
+    tp_ok = axis_divides("heads", h)
+    cst = constrain if tp_ok else (lambda x_, _ax: x_)
+
+    def body(_, args):
+        qi, blk = args
+        # FUSED-head formulation (§Perf iters 3/7/9): scores carry the full
+        # H = hkv*group head dim so TP sharding divides whenever H % TP == 0
+        # (kv- or group-dim alone often doesn't: llama kv=8, g=4, TP=16).
+        # K/V are broadcast to H lazily — per-shard they materialise only
+        # local heads. Without the explicit constraints the bwd pass
+        # all-gathers O(B*H*c*S) score tensors per chunk (measured 18
+        # TB/step on qwen3-moe train_4k).
+        qb = cst(qi, ("batch", None, "heads", None))   # (B,c,H,dh)
+        kf = jnp.broadcast_to(kg, (b, s_len, hkv, group, dh)) \
+            .reshape(b, s_len, h, dh)
+        vf = jnp.broadcast_to(vg, (b, s_len, hkv, group, dv)) \
+            .reshape(b, s_len, h, dv)
+        kf = cst(kf, ("batch", None, "heads", None))
+        vf = cst(vf, ("batch", None, "heads", None))
+        sc = jnp.einsum("bchd,bshd->bhcs", qb.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale     # (B,H,c,S)
+        row = blk * c + jnp.arange(c) + offset              # absolute q pos
+        valid = jnp.ones((c, s_len), bool)
+        if causal:
+            valid &= col[None, :] <= row[:, None]
+        if window is not None:
+            valid &= col[None, :] > row[:, None] - window
+        sc = jnp.where(valid[None, None], sc, NEG_INF)
+        sc = cst(sc, ("batch", "heads", None, None))
+        p = jax.nn.softmax(sc, axis=-1)
+        p = cst(p, ("batch", "heads", None, None))
+        o = jnp.einsum("bhcs,bshd->bchd", p, vf.astype(jnp.float32))
+        o = cst(o, ("batch", None, "heads", None))
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
+    out = outs.swapaxes(0, 1).reshape(b, nq * c, h, dv)
+    return out[:, :t]
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_forward(cfg, p, x: Array, positions: Array, *, causal=True,
+                window=None) -> Array:
+    b, t, _ = x.shape
+    dh = head_dim(cfg)
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.num_heads, dh)
+    k = k.reshape(b, t, cfg.num_kv_heads, dh)
+    v = v.reshape(b, t, cfg.num_kv_heads, dh)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    if cfg.use_flash:
+        from ..kernels.flash_attention import ops as fa
+        out = fa.flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                 v.swapaxes(1, 2), causal=causal)
+        out = out.swapaxes(1, 2)
+    else:
+        out = _attend_chunked(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, t, cfg.num_heads * dh)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def cross_forward(cfg, p, x: Array, enc_kv: tuple[Array, Array]) -> Array:
+    """Cross attention against precomputed encoder K/V (B,S,Hkv,Dh)."""
+    b, t, _ = x.shape
+    dh = head_dim(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, cfg.num_heads, dh)
+    k, v = enc_kv
+    out = _attend_chunked(q, k, v, causal=False, window=None)
+    return out.reshape(b, t, cfg.num_heads * dh) @ p["wo"].astype(x.dtype)
+
+
+def encode_kv(cfg, p, enc_out: Array) -> tuple[Array, Array]:
+    b, s_len, _ = enc_out.shape
+    dh = head_dim(cfg)
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(
+        b, s_len, cfg.num_kv_heads, dh)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(
+        b, s_len, cfg.num_kv_heads, dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# GQA decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    dh = head_dim(cfg)
+    w = cfg.local_window
+    s_len = min(w, max_len) if w else max_len
+    return {
+        "k": jnp.zeros((batch, s_len, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, s_len, cfg.num_kv_heads, dh), dtype),
+        "pos": jnp.full((batch, s_len), -1, jnp.int32),
+    }
+
+
+def gqa_decode(cfg, p, x_t: Array, cache: dict, pos: Array):
+    """x_t: (B, 1, D); pos: (B,) current absolute position. Rolling cache
+    when cfg.local_window is set (O(window) memory for 500k contexts)."""
+    b = x_t.shape[0]
+    dh = head_dim(cfg)
+    q = x_t @ p["wq"].astype(x_t.dtype)
+    k = x_t @ p["wk"].astype(x_t.dtype)
+    v = x_t @ p["wv"].astype(x_t.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x_t.dtype)
+        k = k + p["bk"].astype(x_t.dtype)
+        v = v + p["bv"].astype(x_t.dtype)
+    q = q.reshape(b, 1, cfg.num_heads, dh)
+    k = k.reshape(b, 1, cfg.num_kv_heads, dh)
+    v = v.reshape(b, 1, cfg.num_kv_heads, dh)
+    if cfg.rope_theta:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    s_len = cache["k"].shape[1]
+    slot = (pos % s_len) if cfg.local_window else jnp.minimum(pos, s_len - 1)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
+    cpos = cache["pos"].at[bidx, slot].set(pos)
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    qb = q.reshape(b, cfg.num_kv_heads, group, dh)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qb.astype(jnp.float32),
+                    ck.astype(jnp.float32)) * dh ** -0.5
+    sc = constrain(sc, ("batch", "kv_heads", "heads_group", None))
+    valid = (cpos >= 0) & (cpos <= pos[:, None])
+    if cfg.local_window:
+        valid &= cpos > (pos[:, None] - cfg.local_window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", pr, cv.astype(jnp.float32))
+    o = constrain(o, ("batch", "kv_heads", "heads_group", None))
+    o = o.reshape(b, 1, cfg.num_heads * dh).astype(x_t.dtype)
+    return o @ p["wo"].astype(x_t.dtype), {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): train + absorbed decode over the compressed cache
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg, p, x, positions):
+    from .common import rmsnorm
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    q = (cq @ p["wq_b"].astype(x.dtype)).reshape(b, t, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)                 # (B,T,lora+rope)
+    c_kv = rmsnorm(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)                   # (B,T,rope) shared
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(cfg, p, x: Array, positions: Array) -> Array:
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    k_nope = (c_kv @ p["wk_b"].astype(x.dtype)).reshape(b, t, h, nope)
+    v = (c_kv @ p["wv_b"].astype(x.dtype)).reshape(b, t, h, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, rope))],
+        axis=-1)
+    out = _attend_chunked(q, k, v, causal=True, window=None)
+    out = out.reshape(b, t, h * cfg.v_head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(cfg, p, x_t: Array, cache: dict, pos: Array):
+    """Absorbed MLA decode: scores/values computed against the compressed
+    c_kv cache; W_kb/W_vb folded into the query/output projections."""
+    b = x_t.shape[0]
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x_t, pos[:, None])
+
+    bidx = jnp.arange(b)
+    slot = jnp.minimum(pos, cache["c_kv"].shape[1] - 1)
+    ck = cache["c_kv"].at[bidx, slot].set(c_kv_t[:, 0])
+    kr = cache["k_rope"].at[bidx, slot].set(k_rope_t[:, 0])
+    cpos = cache["pos"].at[bidx, slot].set(pos)
+
+    wk_b = p["wk_b"].reshape(cfg.kv_lora_rank, h, nope)
+    # absorb: q_eff (B,H,lora) = q_nope . W_kb^T
+    q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    sc = jnp.einsum("bhl,bsl->bhs", q_eff, ck.astype(jnp.float32))
+    sc = sc + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                         kr.astype(jnp.float32))
+    sc = sc * (nope + rope) ** -0.5
+    valid = (cpos >= 0) & (cpos <= pos[:, None])
+    sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", pr, ck.astype(jnp.float32))  # (B,H,lora)
+    wv_b = p["wv_b"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    o = jnp.einsum("bhl,lhv->bhv", ctx, wv_b.astype(jnp.float32))
+    o = o.reshape(b, 1, h * cfg.v_head_dim).astype(x_t.dtype)
+    return o @ p["wo"].astype(x_t.dtype), {"c_kv": ck, "k_rope": kr,
+                                           "pos": cpos}

@@ -1,0 +1,142 @@
+"""Shared LM building blocks: params-with-logical-axes, norms, RoPE, losses.
+
+Everything is functional: parameters are nested dicts of arrays; every
+creation site returns (param, logical_axes) through the ParamBuilder so a
+parallel "spec tree" exists for the sharding rules. No framework magic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ParamBuilder:
+    """Collects params + a parallel tree of logical axis tuples."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def make(self, tree: dict, specs: dict, path: list[str], name: str,
+             shape, logical, init="normal", scale=None):
+        if init == "zeros":
+            p = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            p = jnp.ones(shape, self.dtype)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            std = (1.0 / math.sqrt(fan_in)) if scale is None else scale
+            p = (std * jax.random.normal(self._next(), shape)).astype(self.dtype)
+        tree[name] = p
+        specs[name] = tuple(logical)
+        return p
+
+
+def sub(tree: dict, specs: dict, name: str):
+    tree[name] = {}
+    specs[name] = {}
+    return tree[name], specs[name]
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x: Array, norm_params: dict) -> Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, norm_params["scale"], norm_params["bias"])
+    return rmsnorm(x, norm_params["scale"])
+
+
+def make_norm(pb: ParamBuilder, tree, specs, cfg, name: str, dim: int):
+    t, s = sub(tree, specs, name)
+    if cfg.norm_type == "layernorm":
+        pb.make(t, s, [], "scale", (dim,), (None,), init="ones")
+        pb.make(t, s, [], "bias", (dim,), (None,), init="zeros")
+    else:
+        pb.make(t, s, [], "scale", (dim,), (None,), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, T, H, Dh) or (B, T, Dh); positions: (B, T)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, dh/2)
+    if x.ndim == 4:
+        angles = angles[:, :, None, :]                   # (B, T, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : dh // 2], x32[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_chunked(h: Array, w_unembed: Array, labels: Array,
+                          chunk: int = 512) -> Array:
+    """Mean CE over tokens, computed in sequence chunks so the (B, T, V)
+    logits tensor is never materialised (chunks are rematerialised in the
+    backward pass via jax.checkpoint)."""
+    b, t, d = h.shape
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    tt = h.shape[1]
+    h_c = h.reshape(b, tt // c, c, d).swapaxes(0, 1)          # (nc, B, c, d)
+    l_c = labels.reshape(b, tt // c, c).swapaxes(0, 1)        # (nc, B, c)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, lc = xs
+        logits = jnp.einsum("bcd,dv->bcv", hc.astype(jnp.float32),
+                            w_unembed.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - gold) * valid)
+        return carry + jnp.stack([loss, jnp.sum(valid)]), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((2,), jnp.float32), (h_c, l_c))
+    return tot[0] / jnp.maximum(tot[1], 1.0)

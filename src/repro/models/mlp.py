@@ -1,0 +1,31 @@
+"""Dense MLPs: SwiGLU (llama/qwen family) and GELU (starcoder2/whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, sub
+
+
+def init_mlp(pb: ParamBuilder, tree, specs, cfg, d_ff: int | None = None,
+             name: str = "mlp"):
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    t, s = sub(tree, specs, name)
+    if cfg.mlp_type == "swiglu":
+        pb.make(t, s, [], "w_gate", (cfg.d_model, d_ff), ("embed", "mlp"))
+        pb.make(t, s, [], "w_up", (cfg.d_model, d_ff), ("embed", "mlp"))
+        pb.make(t, s, [], "w_down", (d_ff, cfg.d_model), ("mlp", "embed"))
+    else:  # gelu
+        pb.make(t, s, [], "w_up", (cfg.d_model, d_ff), ("embed", "mlp"))
+        pb.make(t, s, [], "b_up", (d_ff,), ("mlp",), init="zeros")
+        pb.make(t, s, [], "w_down", (d_ff, cfg.d_model), ("mlp", "embed"))
+        pb.make(t, s, [], "b_down", (cfg.d_model,), (None,), init="zeros")
+
+
+def mlp_forward(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+        u = x @ p["w_up"].astype(x.dtype)
+        return (g * u) @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)

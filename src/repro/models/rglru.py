@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a xc_t + b_a)              recurrence gate
+    i_t = sigmoid(W_i xc_t + b_i)              input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)     c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xc_t)
+
+where xc is the width-4 causal-conv of the linear branch. Train/prefill use
+``jax.lax.associative_scan`` over time (log-depth, TPU friendly); decode
+keeps an O(lru_width) state. The block multiplies the recurrence output
+with a GeLU gate branch and projects back — giving the hybrid arch its
+constant-memory long-context path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, sub
+from .ssm import _causal_conv
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru(pb: ParamBuilder, tree, specs, cfg):
+    lru = cfg.lru_width or cfg.d_model
+    t, s = sub(tree, specs, "rglru")
+    pb.make(t, s, [], "w_x", (cfg.d_model, lru), ("embed", "lru"))
+    pb.make(t, s, [], "w_gate", (cfg.d_model, lru), ("embed", "lru"))
+    pb.make(t, s, [], "conv_w", (lru, cfg.conv_kernel), ("lru", "conv"))
+    pb.make(t, s, [], "conv_b", (lru,), ("lru",), init="zeros")
+    pb.make(t, s, [], "w_a", (lru, lru), ("lru", None))
+    pb.make(t, s, [], "b_a", (lru,), (None,), init="zeros")
+    pb.make(t, s, [], "w_i", (lru, lru), ("lru", None))
+    pb.make(t, s, [], "b_i", (lru,), (None,), init="zeros")
+    pb.make(t, s, [], "lam", (lru,), (None,), init="ones")
+    pb.make(t, s, [], "w_out", (lru, cfg.d_model), ("lru", "embed"))
+
+
+def _gates(p, xc: Array):
+    r = jax.nn.sigmoid(xc @ p["w_a"].astype(xc.dtype)
+                       + p["b_a"].astype(xc.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["w_i"].astype(xc.dtype)
+                       + p["b_i"].astype(xc.dtype)).astype(jnp.float32)
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = -_C * lam * r                                   # (..., lru) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xc.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(cfg, p, x: Array, *, init=None):
+    """x (B,T,D) -> (y (B,T,D), cache dict)."""
+    xl = x @ p["w_x"].astype(x.dtype)                        # (B,T,lru)
+    xc = _causal_conv(xl, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xc)                                     # (B,T,lru) f32
+    if init is not None:
+        # Fold the carried state in as a virtual step-0 contribution.
+        b = b.at[:, 0].add(a[:, 0] * init["h"].astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    cache = {"h": h[:, -1], "conv": xl[:, -(cfg.conv_kernel - 1):, :]}
+    return y, cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, lru), dtype),
+    }
+
+
+def rglru_decode(cfg, p, x_t: Array, cache: dict):
+    """Single-token step; x_t (B,1,D)."""
+    xl = x_t @ p["w_x"].astype(x_t.dtype)                    # (B,1,lru)
+    win = jnp.concatenate([cache["conv"], xl], axis=1)       # (B,K,lru)
+    xc = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = (xc + p["conv_b"].astype(jnp.float32)).astype(x_t.dtype)
+    a, b = _gates(p, xc)                                     # (B,lru)
+    h = a * cache["h"] + b
+    gate = jax.nn.gelu(x_t @ p["w_gate"].astype(x_t.dtype))  # (B,1,lru)
+    y = (h[:, None, :].astype(x_t.dtype) * gate) @ p["w_out"].astype(x_t.dtype)
+    return y, {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block — chunked, attention-free.
+
+Train/prefill use the quadratic-within-chunk / recurrent-across-chunk SSD
+algorithm (port of the minimal SSD reference to JAX einsums); decode keeps a
+constant-size (H, P, N) state per layer — the reason this arch RUNS the
+long_500k shape while full-attention archs cannot.
+
+Block layout (mamba2): in_proj -> [z | x | B | C | dt]; depthwise causal
+conv over [x|B|C]; silu; SSD; gated RMSNorm(y * silu(z)); out_proj.
+Single B/C group (n_groups=1), scalar A per head (log-parametrised).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, rmsnorm, sub
+
+Array = jax.Array
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+
+
+def init_ssd(pb: ParamBuilder, tree, specs, cfg):
+    d_inner, h, p_dim, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    t, s = sub(tree, specs, "ssd")
+    pb.make(t, s, [], "w_in",
+            (cfg.d_model, 2 * d_inner + 2 * n + h), ("embed", "inner"))
+    pb.make(t, s, [], "conv_w", (conv_dim, cfg.conv_kernel), ("inner", "conv"))
+    pb.make(t, s, [], "conv_b", (conv_dim,), ("inner",), init="zeros")
+    pb.make(t, s, [], "a_log", (h,), (None,), init="zeros")
+    pb.make(t, s, [], "dt_bias", (h,), (None,), init="zeros")
+    pb.make(t, s, [], "d_skip", (h,), (None,), init="ones")
+    pb.make(t, s, [], "norm", (d_inner,), (None,), init="zeros")
+    pb.make(t, s, [], "w_out", (d_inner, cfg.d_model), ("inner", "embed"))
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: x (B,T,C), w (C,K)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.T[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a: Array) -> Array:
+    """a (..., T) -> (..., T, T): sum_{j<i<=t} with -inf above diagonal."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x: Array, a: Array, b_in: Array, c_in: Array, chunk: int,
+             init_state: Array | None = None):
+    """SSD: x (B,T,H,P), a (B,T,H) [log decay, <=0], b/c (B,T,N) shared
+    across heads. Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    bsz, t, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    cs = min(chunk, t)
+    pad = (-t) % cs
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // cs
+    xb = x.reshape(bsz, nc, cs, h, p_dim)
+    ab = a.reshape(bsz, nc, cs, h).transpose(0, 3, 1, 2)    # (B,H,nc,cs)
+    bb = b_in.reshape(bsz, nc, cs, n)
+    cb = c_in.reshape(bsz, nc, cs, n)
+
+    a32 = ab.astype(jnp.float32)
+    acum = jnp.cumsum(a32, axis=-1)                          # (B,H,nc,cs)
+    l_mat = jnp.exp(_segsum(a32))                            # (B,H,nc,cs,cs)
+
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cb.astype(jnp.float32), bb.astype(jnp.float32),
+                        l_mat, xb.astype(jnp.float32))
+
+    # chunk-final states
+    decay_states = jnp.exp(acum[..., -1:] - acum)            # (B,H,nc,cs)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bb.astype(jnp.float32), decay_states,
+                        xb.astype(jnp.float32))              # (B,nc,H,P,N)
+
+    # inter-chunk recurrence: S_{c+1} = exp(sum a_c) S_c + states_c
+    chunk_decay = jnp.exp(acum[..., -1])                     # (B,H,nc)
+    s0 = (jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        dec, st = inp                                        # (B,H), (B,H,P,N)
+        new = dec[..., None, None] * carry + st
+        return new, carry                                    # emit state BEFORE chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(2, 0, 1),
+                   states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(acum)                              # (B,H,nc,cs)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cb.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, nc * cs, h, p_dim)[:, :t]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_forward(cfg, p, x: Array, *, init=None):
+    """Full block. x (B,T,D) -> (y (B,T,D), state dict)."""
+    d_inner, h, p_dim, n = dims(cfg)
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xs, b_in, c_in, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, b_in, c_in = jnp.split(conv, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,T,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))[None, None, :] * dt
+    xh = xs.reshape(*xs.shape[:2], h, p_dim)
+    xd = xh * dt[..., None].astype(xs.dtype)
+    y, state = ssd_scan(xd, a, b_in, c_in, cfg.ssm_chunk,
+                        init_state=init["ssd"] if init else None)
+    skip = (p["d_skip"].astype(jnp.float32)[None, None, :, None]
+            * xh.astype(jnp.float32))
+    y = (y.astype(jnp.float32) + skip).astype(x.dtype)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(x.dtype)
+    conv_tail = conv_in[:, -(cfg.conv_kernel - 1):, :]
+    return out, {"ssd": state, "conv": conv_tail}
+
+
+def init_ssd_cache(cfg, batch: int, dtype) -> dict:
+    d_inner, h, p_dim, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "ssd": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(cfg, p, x_t: Array, cache: dict):
+    """Single-token step. x_t (B,1,D)."""
+    d_inner, h, p_dim, n = dims(cfg)
+    proj = x_t @ p["w_in"].astype(x_t.dtype)
+    z, xs, b_in, c_in, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)     # (B,1,C)
+    win = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    conv = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    conv = conv.astype(x_t.dtype)
+    xs, b_in, c_in = (conv[:, :d_inner], conv[:, d_inner:d_inner + n],
+                      conv[:, d_inner + n:])
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None] * dt)
+    xh = xs.reshape(-1, h, p_dim).astype(jnp.float32)
+    st = cache["ssd"]
+    st = a[..., None, None] * st + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, b_in.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", st, c_in.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner).astype(x_t.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(x_t.dtype)
+    return out, {"ssd": st, "conv": win[:, 1:]}

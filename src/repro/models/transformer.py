@@ -1,0 +1,423 @@
+"""Model assembly: init, train forward, prefill, and decode for all families.
+
+Layers are organised in BlockGroups (configs/base.py). Groups with
+``scan=True`` hold stacked parameters (leading ``layers`` axis) and execute
+under ``jax.lax.scan`` — this keeps the HLO size and 512-device compile time
+bounded for 94-layer models. Per-layer structure is pre-norm residual:
+
+    x += mixer(norm(x));  x += ffn(norm(x))        (ffn absent for ssd)
+
+Whisper (family=encdec) runs a non-causal encoder over stub frame
+embeddings first and gives every decoder layer a cross-attention reading
+the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (ParamBuilder, apply_norm, cross_entropy_chunked,
+                     make_norm, sub)
+from .mlp import init_mlp, mlp_forward
+
+Array = jax.Array
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg, key, mixer: str, ffn: str, cross: bool):
+    pb = ParamBuilder(key, dtype=_dtype(cfg.param_dtype))
+    tree, specs = {}, {}
+    make_norm(pb, tree, specs, cfg, "norm1", cfg.d_model)
+    if mixer in ("attn", "lattn"):
+        attn.init_gqa(pb, tree, specs, cfg)
+    elif mixer == "mla":
+        attn.init_mla(pb, tree, specs, cfg)
+    elif mixer == "ssd":
+        ssm_mod.init_ssd(pb, tree, specs, cfg)
+    elif mixer == "rglru":
+        rglru_mod.init_rglru(pb, tree, specs, cfg)
+    else:
+        raise ValueError(mixer)
+    if cross:
+        make_norm(pb, tree, specs, cfg, "normx", cfg.d_model)
+        attn.init_cross(pb, tree, specs, cfg)
+    if ffn != "none":
+        make_norm(pb, tree, specs, cfg, "norm2", cfg.d_model)
+    if ffn == "mlp":
+        init_mlp(pb, tree, specs, cfg)
+    elif ffn == "moe":
+        moe_mod.init_moe(pb, tree, specs, cfg)
+        if cfg.num_shared_experts:
+            init_mlp(pb, tree, specs, cfg,
+                     d_ff=cfg.num_shared_experts * cfg.moe_d_ff,
+                     name="shared_mlp")
+    return tree, specs
+
+
+def _stack_group(cfg, key, group, cross: bool):
+    keys = jax.random.split(key, group.count)
+    if group.count == 1 or not group.scan:
+        layers = [
+            _init_layer(cfg, k, group.mixer, group.ffn, cross) for k in keys
+        ]
+        params = [p for p, _ in layers]
+        specs = layers[0][1]
+        if not group.scan and group.count > 1:
+            return {"unstacked": params}, {"unstacked": [specs] * group.count}
+        return params[0], specs
+
+    _, s0 = _init_layer(cfg, keys[0], group.mixer, group.ffn, cross)
+    stacked = jax.vmap(
+        lambda k: _init_layer(cfg, k, group.mixer, group.ffn, cross)[0]
+    )(keys)
+    specs = jax.tree.map(
+        lambda sp: ("layers",) + sp, s0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return stacked, specs
+
+
+def init_params(cfg, key) -> tuple[dict, dict]:
+    """Returns (params, logical-axes spec tree of identical structure)."""
+    pb = ParamBuilder(key, dtype=_dtype(cfg.param_dtype))
+    params: dict = {}
+    specs: dict = {}
+    pb.make(params, specs, [], "embed", (cfg.vocab_size, cfg.d_model),
+            ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        pb.make(params, specs, [], "lm_head", (cfg.d_model, cfg.vocab_size),
+                ("embed", "vocab"))
+    make_norm(pb, params, specs, cfg, "final_norm", cfg.d_model)
+
+    if cfg.family == "encdec":
+        from ..configs.base import BlockGroup
+        enc, enc_s = sub(params, specs, "encoder")
+        key, k2 = jax.random.split(key)
+        g = BlockGroup("attn", "mlp", cfg.encoder_layers, True)
+        enc["layers"], enc_s["layers"] = _stack_group(cfg, k2, g, cross=False)
+        make_norm(pb, enc, enc_s, cfg, "final_norm", cfg.d_model)
+
+    groups, groups_s = sub(params, specs, "groups")
+    cross = cfg.family == "encdec"
+    for gi, g in enumerate(cfg.blocks):
+        key, k2 = jax.random.split(key)
+        groups[f"g{gi}"], groups_s[f"g{gi}"] = _stack_group(cfg, k2, g, cross)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg, mixer, ffn, cross, p, x, positions, enc_out,
+               collect_cache: bool):
+    h = apply_norm(cfg, x, p["norm1"])
+    cache = None
+    if mixer == "attn":
+        y = attn.gqa_forward(cfg, p["attn"], h, positions, causal=True)
+        if collect_cache:
+            cache = _gqa_cache_from_seq(cfg, p["attn"], h, positions)
+    elif mixer == "lattn":
+        y = attn.gqa_forward(cfg, p["attn"], h, positions, causal=True,
+                             window=cfg.local_window)
+        if collect_cache:
+            cache = _gqa_cache_from_seq(cfg, p["attn"], h, positions,
+                                        window=cfg.local_window)
+    elif mixer == "mla":
+        y = attn.mla_forward(cfg, p["attn"], h, positions)
+        if collect_cache:
+            cache = _mla_cache_from_seq(cfg, p["attn"], h, positions)
+    elif mixer == "ssd":
+        y, st = ssm_mod.ssd_forward(cfg, p["ssd"], h)
+        cache = st if collect_cache else None
+    elif mixer == "rglru":
+        y, st = rglru_mod.rglru_forward(cfg, p["rglru"], h)
+        cache = st if collect_cache else None
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    aux = {}
+    if cross:
+        hx = apply_norm(cfg, x, p["normx"])
+        kv = attn.encode_kv(cfg, p["xattn"], enc_out)
+        x = x + attn.cross_forward(cfg, p["xattn"], hx, kv)
+        if collect_cache and cache is not None:
+            cache = {**cache, "xk": kv[0], "xv": kv[1]}
+    if ffn == "mlp":
+        h2 = apply_norm(cfg, x, p["norm2"])
+        x = x + mlp_forward(cfg, p["mlp"], h2)
+    elif ffn == "moe":
+        h2 = apply_norm(cfg, x, p["norm2"])
+        y_moe, aux = moe_mod.moe_forward(cfg, p["moe"], h2)
+        if cfg.num_shared_experts:
+            y_moe = y_moe + mlp_forward(cfg, p["shared_mlp"], h2)
+        x = x + y_moe
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sharded over the model axis along T (falls back to
+    # replication when T == 1 or T % TP != 0).
+    x = constrain(x, ("batch", "seq_model", None))
+    return x, cache, aux
+
+
+def _gqa_cache_from_seq(cfg, p, h, positions, window=None):
+    """Build a decode cache from a prefilled sequence (train-path K/V)."""
+    b, t, _ = h.shape
+    dh = attn.head_dim(cfg)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    k = k.reshape(b, t, cfg.num_kv_heads, dh)
+    v = v.reshape(b, t, cfg.num_kv_heads, dh)
+    if cfg.rope_theta:
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+    pos = jnp.broadcast_to(positions, (b, t)).astype(jnp.int32)
+    if window:
+        w = min(window, t)
+        k, v, pos = k[:, -w:], v[:, -w:], pos[:, -w:]
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _mla_cache_from_seq(cfg, p, h, positions):
+    from .common import rmsnorm
+    kv_a = h @ p["wkv_a"].astype(h.dtype)
+    c_kv = rmsnorm(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = attn.apply_rope(kv_a[..., cfg.kv_lora_rank:], positions,
+                             cfg.rope_theta)
+    pos = jnp.broadcast_to(positions, h.shape[:2]).astype(jnp.int32)
+    return {"c_kv": c_kv, "k_rope": k_rope, "pos": pos}
+
+
+def _run_groups(cfg, params, x, positions, enc_out, collect_cache=False):
+    """Run all block groups; returns (x, caches per group, aux sums)."""
+    caches: dict[str, Any] = {}
+    aux_tot = {"load_balance": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+    cross = cfg.family == "encdec"
+
+    for gi, g in enumerate(cfg.blocks):
+        p_g = params["groups"][f"g{gi}"]
+
+        def one(p, x, mixer=g.mixer, ffn=g.ffn):
+            return _layer_fwd(cfg, mixer, ffn, cross, p, x, positions,
+                              enc_out, collect_cache)
+
+        if isinstance(p_g, dict) and "unstacked" in p_g:
+            layer_caches = []
+            for p in p_g["unstacked"]:
+                x, c, aux = one(p, x)
+                layer_caches.append(c)
+                for k2 in aux:
+                    aux_tot[k2] += aux[k2]
+            caches[f"g{gi}"] = layer_caches
+        elif g.count == 1 or not g.scan:
+            x, c, aux = one(p_g, x)
+            caches[f"g{gi}"] = c
+            for k2 in aux:
+                aux_tot[k2] += aux[k2]
+        else:
+            def body(xc, p):
+                x_in, acc = xc
+                fn = one
+                if cfg.remat:
+                    if cfg.remat_policy == "dots":
+                        fn = jax.checkpoint(
+                            one, policy=jax.checkpoint_policies
+                            .dots_with_no_batch_dims_saveable)
+                    else:
+                        fn = jax.checkpoint(one)
+                x_out, c, aux = fn(p, x_in)
+                acc = {k2: acc[k2] + aux.get(k2, 0.0) for k2 in acc}
+                return (x_out, acc), c
+
+            (x, aux_tot), stacked_c = jax.lax.scan(body, (x, aux_tot), p_g)
+            caches[f"g{gi}"] = stacked_c
+    return x, caches, aux_tot
+
+
+def _embed(cfg, params, tokens):
+    cd = _dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cd)
+    return constrain(x, ("batch", "seq_model", None))
+
+
+def _unembed_weight(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _encode(cfg, params, frames):
+    cd = _dtype(cfg.compute_dtype)
+    x = frames.astype(cd)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    enc = params["encoder"]
+
+    def body(x_in, p):
+        h = apply_norm(cfg, x_in, p["norm1"])
+        y = attn.gqa_forward(cfg, p["attn"], h, pos, causal=False)
+        x_in = x_in + y
+        h2 = apply_norm(cfg, x_in, p["norm2"])
+        return x_in + mlp_forward(cfg, p["mlp"], h2), None
+
+    def scan_body(c, p):
+        fn = jax.checkpoint(body) if cfg.remat else body
+        return fn(c, p)
+
+    x, _ = jax.lax.scan(scan_body, x, enc["layers"])
+    return apply_norm(cfg, x, enc["final_norm"])
+
+
+def forward_train(cfg, params, batch) -> tuple[Array, dict]:
+    """batch: tokens (B,T), labels (B,T) [, frames (B,F,D)] -> (loss, metrics)."""
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x = _embed(cfg, params, tokens)
+    x, _, aux = _run_groups(cfg, params, x, positions, enc_out)
+    x = apply_norm(cfg, x, params["final_norm"])
+    loss = cross_entropy_chunked(x, _unembed_weight(cfg, params),
+                                 batch["labels"])
+    metrics = {"loss": loss, **aux}
+    total = loss
+    if cfg.num_experts:
+        total = total + 0.01 * aux["load_balance"] + 1e-4 * aux["router_z"]
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward_prefill(cfg, params, batch):
+    """Prefill: full-sequence pass that returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x = _embed(cfg, params, tokens)
+    x, caches, _ = _run_groups(cfg, params, x, positions, enc_out,
+                               collect_cache=True)
+    x = apply_norm(cfg, x[:, -1:, :], params["final_norm"])
+    logits = (x[:, 0].astype(jnp.float32)
+              @ _unembed_weight(cfg, params).astype(jnp.float32))
+    return logits, caches
+
+
+def init_decode_cache(cfg, batch: int, max_len: int):
+    """Zeroed decode caches matching what forward_prefill produces."""
+    cd = _dtype(cfg.compute_dtype)
+    caches: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.blocks):
+        if g.mixer in ("attn",):
+            c = attn.init_gqa_cache(cfg, batch, max_len, cd)
+        elif g.mixer == "lattn":
+            c = attn.init_gqa_cache(cfg, batch, max_len, cd)
+        elif g.mixer == "mla":
+            c = attn.init_mla_cache(cfg, batch, max_len, cd)
+        elif g.mixer == "ssd":
+            c = ssm_mod.init_ssd_cache(cfg, batch, cd)
+        elif g.mixer == "rglru":
+            c = rglru_mod.init_rglru_cache(cfg, batch, cd)
+        else:
+            raise ValueError(g.mixer)
+        if cfg.family == "encdec":
+            dh = attn.head_dim(cfg)
+            c["xk"] = jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads, dh),
+                                cd)
+            c["xv"] = jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads, dh),
+                                cd)
+        if g.scan and g.count > 1:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (g.count,) + a.shape), c)
+        elif not g.scan and g.count > 1:
+            c = [jax.tree.map(jnp.copy, c) for _ in range(g.count)]
+        caches[f"g{gi}"] = c
+    return caches
+
+
+def _layer_decode(cfg, mixer, ffn, cross, p, x_t, cache, pos, enc_out):
+    del enc_out   # cross-KV is cached at prefill (xk/xv), never recomputed
+    h = apply_norm(cfg, x_t, p["norm1"])
+    xkv = (cache.pop("xk", None), cache.pop("xv", None)) if cross else None
+    cache = dict(cache) if cross else cache
+    if mixer in ("attn", "lattn"):
+        y, cache = attn.gqa_decode(cfg, p["attn"], h, cache, pos)
+    elif mixer == "mla":
+        y, cache = attn.mla_decode(cfg, p["attn"], h, cache, pos)
+    elif mixer == "ssd":
+        y, cache = ssm_mod.ssd_decode(cfg, p["ssd"], h, cache)
+    elif mixer == "rglru":
+        y, cache = rglru_mod.rglru_decode(cfg, p["rglru"], h, cache)
+    else:
+        raise ValueError(mixer)
+    x_t = x_t + y
+    if cross:
+        hx = apply_norm(cfg, x_t, p["normx"])
+        x_t = x_t + attn.cross_forward(cfg, p["xattn"], hx, xkv)
+        cache = {**cache, "xk": xkv[0], "xv": xkv[1]}
+    if ffn == "mlp":
+        h2 = apply_norm(cfg, x_t, p["norm2"])
+        x_t = x_t + mlp_forward(cfg, p["mlp"], h2)
+    elif ffn == "moe":
+        h2 = apply_norm(cfg, x_t, p["norm2"])
+        y_moe, _ = moe_mod.moe_forward(cfg, p["moe"], h2)
+        if cfg.num_shared_experts:
+            y_moe = y_moe + mlp_forward(cfg, p["shared_mlp"], h2)
+        x_t = x_t + y_moe
+    return x_t, cache
+
+
+def decode_step(cfg, params, caches, tokens_t: Array, pos: Array):
+    """One decode step: tokens_t (B,1), pos (B,) -> (logits (B,V), caches)."""
+    x = _embed(cfg, params, tokens_t)
+    enc_out = None
+    cross = cfg.family == "encdec"
+    new_caches = dict(caches)
+    for gi, g in enumerate(cfg.blocks):
+        p_g = params["groups"][f"g{gi}"]
+        c_g = caches[f"g{gi}"]
+
+        if isinstance(p_g, dict) and "unstacked" in p_g:
+            outs = []
+            for p, c in zip(p_g["unstacked"], c_g):
+                x, c2 = _layer_decode(cfg, g.mixer, g.ffn, cross, p, x, c,
+                                      pos, enc_out)
+                outs.append(c2)
+            new_caches[f"g{gi}"] = outs
+        elif g.count == 1 or not g.scan:
+            x, c2 = _layer_decode(cfg, g.mixer, g.ffn, cross, p_g, x, c_g,
+                                  pos, enc_out)
+            new_caches[f"g{gi}"] = c2
+        else:
+            def body(x_in, pc, mixer=g.mixer, ffn=g.ffn):
+                p, c = pc
+                x_out, c2 = _layer_decode(cfg, mixer, ffn, cross, p, x_in, c,
+                                          pos, enc_out)
+                return x_out, c2
+
+            x, c2 = jax.lax.scan(body, x, (p_g, c_g))
+            new_caches[f"g{gi}"] = c2
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = (x[:, 0].astype(jnp.float32)
+              @ _unembed_weight(cfg, params).astype(jnp.float32))
+    return logits, new_caches

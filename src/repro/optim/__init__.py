@@ -1,0 +1,2 @@
+from . import adam
+from .adam import AdamConfig, adam_update, init_opt_state

@@ -1,0 +1,53 @@
+"""int8 error-feedback gradient compression (beyond-paper DP optimisation).
+
+Before the data-parallel all-reduce, gradients are quantised to int8 with a
+per-tensor scale; the quantisation residual is carried to the next step
+(error feedback, Seide et al. 2014 / Karimireddy et al. 2019), which keeps
+SGD/Adam convergence. 4x less DP all-reduce traffic; enable per-config when
+the roofline says the step is DP-collective-bound.
+
+``compress_fn`` plugs into train.steps.make_train_step(compression=...):
+it simulates the wire format (quantise -> dequantise) and maintains the
+error state functionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, err):
+    """Returns (wire-equivalent grads, new error state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def wire_bytes(grads, compressed: bool) -> int:
+    tot = 0
+    for g in jax.tree.leaves(grads):
+        tot += g.size * (1 if compressed else 4)
+    return tot

@@ -1,0 +1,186 @@
+"""train_step / serve_step builders shared by the trainer, benchmarks, and
+the multi-pod dry-run (which lowers these exact functions).
+
+TrainState = {params, opt {m, v, step}}. The builders return pure functions
+suitable for jax.jit with in/out shardings derived from the model's logical
+spec tree (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import transformer as tf
+from ..optim import adam as adam_mod
+
+Array = jax.Array
+
+
+def init_train_state(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (state, spec tree matching state)."""
+    params, pspecs = tf.init_params(cfg, key)
+    opt = adam_mod.init_opt_state(params)
+    state = {"params": params, "opt": opt}
+    specs = {"params": pspecs,
+             "opt": {"m": pspecs, "v": pspecs, "step": ()}}
+    return state, specs
+
+
+def make_train_step(cfg: ModelConfig, adam_cfg: adam_mod.AdamConfig | None = None,
+                    compression=None):
+    adam_cfg = adam_cfg or adam_mod.AdamConfig()
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return tf.forward_train(cfg, params, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        if compression is not None:
+            grads = compression(grads)
+        new_params, new_opt, opt_metrics = adam_mod.adam_update(
+            adam_cfg, state["params"], grads, state["opt"])
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return tf.forward_prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens_t, pos):
+        return tf.decode_step(cfg, params, caches, tokens_t, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for dry-run lowering (ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Abstract batch for (cfg, shape). Training/prefill: full sequences;
+    decode: one new token + the KV/state cache at shape.seq_len."""
+    b, t = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((b, t), jnp.int32),
+                 "labels": sds((b, t), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, cfg.num_frames, cfg.d_model),
+                                  jnp.bfloat16)
+        if shape.kind == "prefill":
+            del batch["labels"]
+        return batch
+    # decode: tokens (B,1) + pos + caches
+    caches = jax.eval_shape(lambda: tf.init_decode_cache(cfg, b, t))
+    return {"tokens_t": sds((b, 1), jnp.int32),
+            "pos": sds((b,), jnp.int32),
+            "caches": caches}
+
+
+_CACHE_LOGICAL = {
+    # decode-cache leaf name -> logical axes (rank-matched, padded with None)
+    "k": ("batch", "seq_shard", "kv_heads", None),
+    "v": ("batch", "seq_shard", "kv_heads", None),
+    "pos": ("batch", None),
+    "c_kv": ("batch", "seq_shard", None),
+    "k_rope": ("batch", "seq_shard", None),
+    "ssd": ("batch", "heads", None, None),
+    "conv": ("batch", None, "inner"),
+    "h": ("batch", "lru"),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+}
+
+
+def cache_specs(cfg: ModelConfig, caches_sds) -> Any:
+    """Logical-axes tree matching an (abstract) decode-cache pytree."""
+
+    def one_fixed(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        base = _CACHE_LOGICAL.get(name, ())
+        if leaf.ndim == len(base):
+            return tuple(base)
+        if leaf.ndim == len(base) + 1:      # stacked over layers
+            return ("layers",) + tuple(base)
+        return (None,) * leaf.ndim
+
+    import jax.tree_util as jtu
+    return jtu.tree_map_with_path(one_fixed, caches_sds)
+
+
+def batch_specs(cfg: ModelConfig, batch_sds) -> Any:
+    """Logical axes for a train/prefill/decode input batch."""
+    out = {}
+    for k, v in batch_sds.items():
+        if k == "caches":
+            out[k] = cache_specs(cfg, v)
+        elif k == "frames":
+            out[k] = ("batch", None, None)
+        elif k == "pos":
+            out[k] = ("batch",)
+        else:  # tokens / labels / tokens_t
+            out[k] = ("batch", None)[:v.ndim] if v.ndim else ()
+            out[k] = tuple(out[k]) + (None,) * (v.ndim - len(out[k]))
+    return out
+
+
+def abstract_state(cfg: ModelConfig) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct train state, matching logical spec tree)."""
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        functools.partial(_init_state_nokey, cfg))
+    # spec tree must be built concretely (it is plain metadata)
+    _, specs = _specs_only(cfg)
+    return state_shapes, specs
+
+
+def _init_state_nokey(cfg):
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    return state
+
+
+@functools.lru_cache(maxsize=None)
+def _specs_cache():
+    return {}
+
+
+def _specs_only(cfg):
+    cache = _specs_cache()
+    if cfg.name not in cache:
+        # Build specs via an abstract init (no device allocation).
+        def f():
+            _, pspecs = tf.init_params(cfg, jax.random.PRNGKey(0))
+            return pspecs
+
+        # specs are static metadata produced during tracing; evaluate the
+        # init abstractly and capture specs from a side channel.
+        holder = {}
+
+        def g():
+            params, pspecs = tf.init_params(cfg, jax.random.PRNGKey(0))
+            holder["specs"] = pspecs
+            return params
+
+        jax.eval_shape(g)
+        pspecs = holder["specs"]
+        cache[cfg.name] = {
+            "params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": ()},
+        }
+    return None, cache[cfg.name]

@@ -1,0 +1,97 @@
+"""Subprocess worker: distributed-vs-sequential parity on 8 fake devices.
+
+Run by tests/test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps its real single-device view.
+"""
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), \
+    "worker must be launched with a placeholder device fleet"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import DistributedGP  # noqa: E402
+from repro.core.bound import collapsed_bound  # noqa: E402
+from repro.core.stats import partial_stats  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(7)
+    n, m, q, d = 101, 9, 2, 3  # n % 8 != 0 exercises padding
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    s = rng.uniform(0.05, 0.6, (n, q))
+    z = rng.standard_normal((m, q))
+    hyp = {"log_sf2": jnp.asarray(0.1), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(0.5)}
+    nf = jnp.asarray(float(n))
+
+    # --- regression parity (value and grads) -------------------------------
+    eng = DistributedGP(mesh, data_axes=("data", "model"), latent=False)
+    data, w = eng.put_data(y=y, mu=x)
+    vg = eng.make_value_and_grad(d, argnums=(0, 1))
+    ones = jnp.ones((eng.n_shards,))
+    v, (gh, gz) = vg(hyp, jnp.asarray(z), data["mu"], None, data["y"], w, ones, nf)
+
+    def seq_neg(h, zz):
+        st = partial_stats(h, zz, jnp.asarray(y), jnp.asarray(x), s=None,
+                           latent=False)
+        return -collapsed_bound(h, zz, st, d)
+
+    v_ref, (gh_ref, gz_ref) = jax.value_and_grad(seq_neg, argnums=(0, 1))(
+        hyp, jnp.asarray(z))
+    assert abs(float(v) - float(v_ref)) < 1e-9 * abs(float(v_ref))
+    np.testing.assert_allclose(np.asarray(gz), np.asarray(gz_ref), rtol=1e-8,
+                               atol=1e-10)
+    for k2 in gh:
+        np.testing.assert_allclose(np.asarray(gh[k2]), np.asarray(gh_ref[k2]),
+                                   rtol=1e-8, atol=1e-10)
+
+    # --- latent parity ------------------------------------------------------
+    engl = DistributedGP(mesh, data_axes=("data", "model"), latent=True)
+    datal, wl = engl.put_data(y=y, mu=x, s=s)
+    vgl = engl.make_value_and_grad(d, argnums=(0, 1, 2, 3))
+    vl, _ = vgl(hyp, jnp.asarray(z), datal["mu"], datal["s"], datal["y"],
+                wl, jnp.ones((engl.n_shards,)), nf)
+
+    def seq_neg_l(h, zz):
+        st = partial_stats(h, zz, jnp.asarray(y), jnp.asarray(x),
+                           s=jnp.asarray(s), latent=True)
+        return -collapsed_bound(h, zz, st, d)
+
+    vl_ref = seq_neg_l(hyp, jnp.asarray(z))
+    assert abs(float(vl) - float(vl_ref)) < 1e-9 * abs(float(vl_ref))
+
+    # --- node failure: drop vs rescale --------------------------------------
+    fm = jnp.ones((engl.n_shards,)).at[2].set(0.0)
+    v_drop, _ = vgl(hyp, jnp.asarray(z), datal["mu"], datal["s"], datal["y"],
+                    wl, fm, nf)
+    eng_r = DistributedGP(mesh, data_axes=("data", "model"), latent=True,
+                          failure_mode="rescale")
+    vg_r = eng_r.make_value_and_grad(d, argnums=(0,))
+    v_resc, _ = vg_r(hyp, jnp.asarray(z), datal["mu"], datal["s"], datal["y"],
+                     wl, fm, nf)
+    # rescaled objective should be closer to the true (no-failure) value
+    assert abs(float(v_resc) - float(vl_ref)) <= abs(float(v_drop) - float(vl_ref))
+    assert np.isfinite(float(v_drop)) and np.isfinite(float(v_resc))
+
+    # --- elastic re-sharding: same data on a different mesh, same bound ----
+    mesh2 = jax.make_mesh((8,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    eng2 = DistributedGP(mesh2, data_axes=("data",), latent=False)
+    data2, w2 = eng2.put_data(y=y, mu=x)
+    vg2 = eng2.make_value_and_grad(d, argnums=(0,))
+    v2, _ = vg2(hyp, jnp.asarray(z), data2["mu"], None, data2["y"], w2,
+                jnp.ones((eng2.n_shards,)), nf)
+    assert abs(float(v2) - float(v_ref)) < 1e-9 * abs(float(v_ref))
+
+    print("DIST-WORKER-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single-device CPU; only launch/dryrun.py (and the
+subprocess-based distributed tests) request placeholder device fleets."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_regression(rng, n=60, q=2, d=2, noise=0.1):
+    """Smooth synthetic regression data (paper-style sines over latents)."""
+    x = rng.uniform(-2.0, 2.0, size=(n, q))
+    w = rng.standard_normal((q, d))
+    f = np.sin(x @ w) + 0.5 * np.cos(2.0 * (x @ w[:, ::-1]))
+    y = f + noise * rng.standard_normal((n, d))
+    return x, y
+
+
+@pytest.fixture
+def regression_data(rng):
+    return make_regression(rng)

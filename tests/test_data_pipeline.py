@@ -1,0 +1,42 @@
+"""Token stream: determinism, restart-exactness, learnable structure."""
+import numpy as np
+
+from repro.data.tokens import TokenStream
+
+
+def test_batch_is_step_addressed():
+    s1 = TokenStream(vocab_size=1000, seq_len=32, global_batch=4, seed=7)
+    s2 = TokenStream(vocab_size=1000, seq_len=32, global_batch=4, seed=7)
+    for step in (0, 5, 1000):
+        a = s1.host_batch(step)
+        b = s2.host_batch(step)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_labels_are_shifted_tokens():
+    s = TokenStream(vocab_size=512, seq_len=16, global_batch=2, seed=0)
+    b = s.host_batch(3)
+    # labels[t] is the next token in the underlying sequence:
+    # tokens[:, 1:] == labels[:, :-1]
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_steps_differ_and_in_range():
+    s = TokenStream(vocab_size=300, seq_len=64, global_batch=2, seed=1)
+    a = s.host_batch(0)
+    b = s.host_batch(1)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 300
+
+
+def test_copy_structure_learnable():
+    """Half the rows repeat their first half — a model with context can
+    beat the unigram entropy; verify the structure exists."""
+    s = TokenStream(vocab_size=100, seq_len=64, global_batch=64, seed=2)
+    b = s.host_batch(0)
+    full = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    half = full.shape[1] // 2
+    rep_rows = np.mean([
+        np.array_equal(r[:half], r[half:2 * half]) for r in full])
+    assert 0.3 < rep_rows < 0.7

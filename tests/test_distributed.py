@@ -1,0 +1,89 @@
+"""Distributed engine tests.
+
+The multi-device parity checks run in a subprocess with a placeholder
+device fleet (XLA_FLAGS) so this pytest process keeps jax uninitialised
+at 1 device for the smoke tests, per the launch contract.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistributedGP
+from repro.core.bound import collapsed_bound
+from repro.core.stats import Stats, partial_stats, reduce_stats
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_multidevice_parity_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = f"{ROOT / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_dist_worker.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "DIST-WORKER-OK" in out.stdout
+
+
+def test_manual_sharding_equals_sequential(rng):
+    """Host-side map/reduce (no mesh needed): k partial stats sum to global."""
+    n, m, q, d, k = 50, 7, 2, 2, 5
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(1.0)}
+    full = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                         s=None, latent=False)
+    parts = [
+        partial_stats(hyp, jnp.asarray(z), jnp.asarray(y[i::k]),
+                      jnp.asarray(x[i::k]), s=None, latent=False)
+        for i in range(k)
+    ]
+    summed = reduce_stats(parts)
+    for a, b in zip(full, summed):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-10)
+    b1 = collapsed_bound(hyp, jnp.asarray(z), full, d)
+    b2 = collapsed_bound(hyp, jnp.asarray(z), summed, d)
+    assert abs(float(b1) - float(b2)) < 1e-8
+
+
+def test_single_device_mesh_runs(rng):
+    """The engine degrades gracefully to a 1-device mesh (sequential)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    eng = DistributedGP(mesh, data_axes=("data",), latent=False)
+    n, m, q, d = 20, 5, 2, 1
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = {"log_sf2": jnp.asarray(0.0), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(0.0)}
+    data, w = eng.put_data(y=y, mu=x)
+    vg = eng.make_value_and_grad(d)
+    v, _ = vg(hyp, jnp.asarray(z), data["mu"], None, data["y"], w,
+              jnp.ones((1,)), jnp.asarray(float(n)))
+    st = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                       s=None, latent=False)
+    ref = -collapsed_bound(hyp, jnp.asarray(z), st, d)
+    assert abs(float(v) - float(ref)) < 1e-10 * max(1.0, abs(float(ref)))
+
+
+def test_stats_weights_mask_padding(rng):
+    """Zero-weight rows contribute nothing (padding/failure correctness)."""
+    n, m, q, d = 16, 4, 2, 2
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = {"log_sf2": jnp.asarray(0.0), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(0.0)}
+    w = np.ones(n); w[10:] = 0.0
+    masked = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                           s=None, weights=jnp.asarray(w), latent=False)
+    truncated = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y[:10]),
+                              jnp.asarray(x[:10]), s=None, latent=False)
+    for a, b in zip(masked, truncated):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)

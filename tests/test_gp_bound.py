@@ -1,0 +1,130 @@
+"""Bound correctness: the paper's exactness claim.
+
+The re-parametrised collapsed bound must (1) equal the textbook Titsias
+bound computed without the re-parametrisation, (2) never exceed the exact
+log marginal likelihood, (3) become exact when Z = X, and (4) be monotone
+in the inducing set.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bound as bound_mod
+from repro.core import ref_naive
+from repro.core.stats import partial_stats
+
+from conftest import make_regression
+
+
+def _mk_hyp(q, log_sf2=0.2, log_ell=0.1, log_beta=1.5):
+    return {
+        "log_sf2": jnp.asarray(log_sf2),
+        "log_ell": jnp.full((q,), log_ell),
+        "log_beta": jnp.asarray(log_beta),
+    }
+
+
+def _bound(hyp, x, y, z, jitter=1e-10):
+    st_ = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                        s=None, latent=False)
+    return float(bound_mod.collapsed_bound(hyp, jnp.asarray(z), st_,
+                                           y.shape[1], jitter=jitter))
+
+
+def test_matches_direct_titsias_bound(rng, regression_data):
+    x, y = regression_data
+    z = x[rng.choice(len(x), 15, replace=False)]
+    hyp = _mk_hyp(x.shape[1])
+    ours = _bound(hyp, x, y, z)
+    direct = float(ref_naive.titsias_bound_direct(
+        hyp, jnp.asarray(x), jnp.asarray(y), jnp.asarray(z), jitter=1e-10))
+    assert ours == pytest.approx(direct, rel=1e-8, abs=1e-6)
+
+
+def test_never_exceeds_exact_lml(rng, regression_data):
+    x, y = regression_data
+    z = x[rng.choice(len(x), 10, replace=False)]
+    hyp = _mk_hyp(x.shape[1])
+    exact = float(ref_naive.exact_lml(hyp, jnp.asarray(x), jnp.asarray(y)))
+    assert _bound(hyp, x, y, z) <= exact + 1e-6
+
+
+def test_exact_when_z_equals_x(rng):
+    x, y = make_regression(rng, n=30)
+    hyp = _mk_hyp(x.shape[1])
+    exact = float(ref_naive.exact_lml(hyp, jnp.asarray(x), jnp.asarray(y),
+                                      jitter=1e-10))
+    assert _bound(hyp, x, y, x) == pytest.approx(exact, rel=1e-6, abs=1e-4)
+
+
+def test_monotone_in_inducing_set(rng, regression_data):
+    """Adding an inducing point can only tighten the collapsed bound."""
+    x, y = regression_data
+    hyp = _mk_hyp(x.shape[1])
+    idx = rng.permutation(len(x))
+    prev = -np.inf
+    for m in (5, 10, 20, 40):
+        b = _bound(hyp, x, y, x[idx[:m]])
+        assert b >= prev - 1e-6
+        prev = b
+
+
+def test_prediction_matches_exact_gp_when_z_is_x(rng):
+    x, y = make_regression(rng, n=40)
+    hyp = _mk_hyp(x.shape[1])
+    st_ = partial_stats(hyp, jnp.asarray(x), jnp.asarray(y), jnp.asarray(x),
+                        s=None, latent=False)
+    qu = bound_mod.optimal_qu(hyp, jnp.asarray(x), st_, jitter=1e-10)
+    xs = rng.uniform(-2, 2, size=(7, x.shape[1]))
+    mean, var = bound_mod.predict(hyp, jnp.asarray(x), qu, jnp.asarray(xs))
+    em, ev = ref_naive.exact_predict(hyp, jnp.asarray(x), jnp.asarray(y),
+                                     jnp.asarray(xs))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(em),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(ev),
+                               rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log_sf2=st.floats(-1.0, 1.5),
+    log_ell=st.floats(-0.7, 1.0),
+    log_beta=st.floats(-0.5, 3.0),
+    n=st.integers(8, 40),
+    m=st.integers(2, 8),
+)
+def test_property_bound_below_exact(seed, log_sf2, log_ell, log_beta, n, m):
+    """For any hypers/data/Z: collapsed bound <= exact log marginal."""
+    rng = np.random.default_rng(seed)
+    q, d = 2, 2
+    x = rng.standard_normal((n, q))
+    y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q, log_sf2, log_ell, log_beta)
+    b = _bound(hyp, x, y, z, jitter=1e-8)
+    exact = float(ref_naive.exact_lml(hyp, jnp.asarray(x), jnp.asarray(y)))
+    assert b <= exact + 1e-4 * max(1.0, abs(exact))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_stats_permutation_invariant(seed):
+    """Statistics (and hence the bound) are invariant to data ordering —
+    the decoupling property the whole paper rests on."""
+    rng = np.random.default_rng(seed)
+    n, q, d, m = 25, 2, 3, 6
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    s = rng.uniform(0.05, 0.8, size=(n, q))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    perm = rng.permutation(n)
+    a = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                      s=jnp.asarray(s), latent=True)
+    b = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y[perm]),
+                      jnp.asarray(x[perm]), s=jnp.asarray(s[perm]), latent=True)
+    for ta, tb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ta), np.asarray(tb),
+                                   rtol=1e-9, atol=1e-9)

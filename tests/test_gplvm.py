@@ -1,0 +1,60 @@
+"""GPLVM behaviour tests mirroring the paper's figures 1 & 4."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BayesianGPLVM, SGPR
+from repro.core.bound import collapsed_bound
+from repro.core.stats import partial_stats
+from repro.data.synthetic import sines_dataset
+
+
+def test_regression_is_zero_variance_gplvm(rng):
+    """Paper's unifying claim: GPLVM bound with S->0, mu=X, no KL == SGPR bound."""
+    n, q, d, m = 30, 2, 2, 8
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(1.0)}
+    st_reg = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                           s=None, latent=False)
+    st_lvm = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                           s=jnp.full((n, q), 1e-13), latent=False)
+    b_reg = float(collapsed_bound(hyp, jnp.asarray(z), st_reg, d))
+    b_lvm = float(collapsed_bound(hyp, jnp.asarray(z), st_lvm, d))
+    assert abs(b_reg - b_lvm) < 1e-5 * max(1.0, abs(b_reg))
+
+
+def test_recovers_1d_latent(rng):
+    """Paper fig 1: 1D latent -> 3D sines; ARD should find ~1 relevant dim."""
+    y, _ = sines_dataset(rng, n=200, noise=0.05)
+    lv = BayesianGPLVM(y, q=2, num_inducing=16, seed=0)
+    lv.fit(max_iters=150)
+    w = np.sort(lv.ard_weights())[::-1]
+    assert w[0] > 3.0 * w[1]  # one dominant latent dimension
+
+
+def test_bound_improves_and_beats_pca_init(rng):
+    y, _ = sines_dataset(rng, n=80, noise=0.1)
+    lv = BayesianGPLVM(y, q=2, num_inducing=10)
+    b0 = lv.log_bound()
+    lv.fit(max_iters=60)
+    assert lv.log_bound() > b0
+
+
+def test_alternating_schedule_improves(rng):
+    """The paper's parallel G/L alternation also optimises the bound."""
+    y, _ = sines_dataset(rng, n=60, noise=0.1)
+    lv = BayesianGPLVM(y, q=2, num_inducing=8)
+    b0 = lv.log_bound()
+    lv.fit(max_iters=60, joint=False, outer_rounds=5)
+    assert lv.log_bound() > b0
+
+
+def test_reconstruction_runs(rng):
+    y, _ = sines_dataset(rng, n=60, noise=0.05)
+    lv = BayesianGPLVM(y, q=2, num_inducing=10)
+    lv.fit(max_iters=60)
+    observed = np.array([True, True, False])
+    rec = lv.reconstruct(y[:5] * observed, observed, iters=30)
+    assert rec.shape == (5, 3)
+    assert np.isfinite(rec).all()

@@ -1,0 +1,71 @@
+"""The trip-count-aware HLO analyzer vs known-flop programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analyzer import analyze
+
+
+def _flops_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze(txt)
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    out = _flops_of(lambda x, y: x @ y, a, b)
+    want = 2 * 256 * 512 * 128
+    assert out["flops"] == pytest.approx(want, rel=0.05)
+
+
+def test_scan_trip_count_weighting():
+    """XLA cost_analysis counts scan bodies once; the analyzer must not."""
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((16, 128, 128), jnp.float32)
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    out = _flops_of(f, x, ws)
+    want = 16 * 2 * 64 * 128 * 128
+    assert out["flops"] == pytest.approx(want, rel=0.1)
+    assert out["unresolved_loops"] == 0
+
+    # sanity: raw cost_analysis under-counts by ~trip count
+    raw = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
+    assert out["flops"] / max(raw, 1) > 8
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+
+    def f(x, ws):
+        def outer(c, _):
+            def inner(ci, w):
+                return ci @ w, None
+            return jax.lax.scan(inner, c, ws)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    out = _flops_of(f, x, ws)
+    want = 5 * 4 * 2 * 32 * 64 * 64
+    assert out["flops"] == pytest.approx(want, rel=0.1)
+
+
+def test_collectives_inside_scan_are_weighted():
+    """A psum inside a scanned layer must count once per layer."""
+    import os
+    # needs >1 device to emit a real collective; use the 1-device mesh —
+    # XLA elides the all-reduce, so just assert the analyzer runs clean.
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    out = _flops_of(lambda a: a @ a, x)
+    assert "collectives" in out
+
+
+def test_bytes_reasonable_for_copy():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    out = _flops_of(lambda a: a + 1.0, x)
+    # operand + result ~ 8 MB
+    assert 4e6 < out["bytes"] < 4e7

@@ -1,0 +1,54 @@
+"""Analytic parameter counts (roofline model) vs abstract init (eval_shape),
+and sanity vs the published model sizes."""
+import jax
+import pytest
+
+from repro.configs import all_configs, load_all
+from repro.launch.roofline import _active_params
+from repro.models import transformer as tf
+
+load_all()
+
+# published total-parameter ballparks (name -> (min, max) in billions)
+PUBLISHED = {
+    "qwen2-1.5b": (1.2, 2.0),
+    "llama3.2-1b": (1.0, 1.6),
+    "starcoder2-3b": (2.5, 3.5),
+    "codeqwen1.5-7b": (6.0, 8.5),   # untied 92k vocab adds ~0.76B over "7B"
+    "whisper-medium": (0.6, 1.1),        # enc+dec+cross
+    "deepseek-v2-236b": (200.0, 250.0),
+    "qwen3-moe-235b-a22b": (200.0, 260.0),
+    "chameleon-34b": (30.0, 38.0),
+    "recurrentgemma-9b": (7.5, 11.0),
+    "mamba2-370m": (0.3, 0.45),
+}
+
+ACTIVE = {  # active-params ballparks for the MoE archs
+    "deepseek-v2-236b": (18.0, 25.0),
+    "qwen3-moe-235b-a22b": (18.0, 26.0),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(all_configs()))
+def test_analytic_matches_abstract_init(arch):
+    cfg = all_configs()[arch]
+    shapes = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0))[0])
+    actual = sum(s.size for s in jax.tree.leaves(shapes))
+    analytic, _ = _active_params(cfg)
+    # analytic model ignores norm scales/biases (< 0.1% of any arch)
+    assert abs(actual - analytic) / actual < 0.02, (
+        f"{arch}: init={actual / 1e9:.3f}B analytic={analytic / 1e9:.3f}B")
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_total_params_match_published(arch):
+    cfg = all_configs()[arch]
+    total, active = _active_params(cfg)
+    lo, hi = PUBLISHED[arch]
+    assert lo <= total / 1e9 <= hi, f"{arch}: {total / 1e9:.2f}B"
+    if arch in ACTIVE:
+        lo, hi = ACTIVE[arch]
+        assert lo <= active / 1e9 <= hi, f"{arch} active: {active / 1e9:.2f}B"
+    else:
+        assert active == total

@@ -1,0 +1,110 @@
+"""Psi-statistic correctness: closed forms vs Monte-Carlo and limits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gp_kernels as gpk
+
+
+def _mk_hyp(q, rng=None):
+    if rng is None:
+        return {"log_sf2": jnp.asarray(0.3), "log_ell": jnp.full((q,), -0.1),
+                "log_beta": jnp.asarray(1.0)}
+    return {"log_sf2": jnp.asarray(rng.uniform(-1, 1)),
+            "log_ell": jnp.asarray(rng.uniform(-0.5, 0.5, q)),
+            "log_beta": jnp.asarray(1.0)}
+
+
+def test_psi1_zero_variance_limit(rng):
+    n, m, q = 20, 7, 3
+    x = rng.standard_normal((n, q)); z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    p1 = gpk.psi1(hyp, jnp.asarray(z), jnp.asarray(x), jnp.zeros((n, q)))
+    k = gpk.ard_kernel(hyp, jnp.asarray(x), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(k), rtol=1e-12)
+
+
+def test_psi2_zero_variance_limit(rng):
+    n, m, q = 20, 7, 3
+    x = rng.standard_normal((n, q)); z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    p2 = gpk.psi2(hyp, jnp.asarray(z), jnp.asarray(x), jnp.zeros((n, q)))
+    k = gpk.ard_kernel(hyp, jnp.asarray(x), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(k.T @ k),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_psi_monte_carlo(rng):
+    """Closed forms match Monte-Carlo expectations over q(X)."""
+    n, m, q, ns = 4, 5, 2, 400_000
+    mu = rng.standard_normal((n, q))
+    s = rng.uniform(0.1, 0.6, (n, q))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q, rng)
+    eps = rng.standard_normal((ns, n, q))
+    xs = mu[None] + np.sqrt(s)[None] * eps          # samples from q(X)
+    k = np.asarray(gpk.ard_kernel(hyp, jnp.asarray(xs.reshape(-1, q)),
+                                  jnp.asarray(z))).reshape(ns, n, m)
+    mc_psi1 = k.mean(axis=0)
+    mc_psi2 = np.einsum("sna,snb->nab", k, k) / ns
+    p1 = np.asarray(gpk.psi1(hyp, jnp.asarray(z), jnp.asarray(mu), jnp.asarray(s)))
+    p2 = np.asarray(gpk.psi2_per_point(hyp, jnp.asarray(z), jnp.asarray(mu),
+                                       jnp.asarray(s)))
+    np.testing.assert_allclose(p1, mc_psi1, rtol=0.02, atol=5e-3)
+    np.testing.assert_allclose(p2, mc_psi2, rtol=0.05, atol=5e-3)
+
+
+def test_psi2_chunked_equals_dense(rng):
+    n, m, q = 37, 6, 3  # n not divisible by chunk
+    mu = rng.standard_normal((n, q)); s = rng.uniform(0.05, 0.5, (n, q))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    dense = gpk.psi2(hyp, jnp.asarray(z), jnp.asarray(mu), jnp.asarray(s))
+    chunked = gpk.psi2_chunked(hyp, jnp.asarray(z), jnp.asarray(mu),
+                               jnp.asarray(s), chunk=8)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_kl_formula(rng):
+    n, q = 11, 3
+    mu = rng.standard_normal((n, q)); s = rng.uniform(0.1, 2.0, (n, q))
+    ours = float(gpk.kl_to_standard_normal(jnp.asarray(mu), jnp.asarray(s)))
+    ref = 0.5 * np.sum(s + mu**2 - np.log(s) - 1.0)
+    assert ours == pytest.approx(ref, rel=1e-10)
+    assert ours >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_psi2_per_point_psd(seed):
+    """Each psi2_i = <k k^T> is a PSD matrix (it is a second moment)."""
+    rng = np.random.default_rng(seed)
+    n, m, q = 3, 6, 2
+    mu = rng.standard_normal((n, q)); s = rng.uniform(0.01, 1.5, (n, q))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q, rng)
+    p2 = np.asarray(gpk.psi2_per_point(hyp, jnp.asarray(z), jnp.asarray(mu),
+                                       jnp.asarray(s)))
+    for i in range(n):
+        ev = np.linalg.eigvalsh(0.5 * (p2[i] + p2[i].T))
+        assert ev.min() >= -1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_psi_bounds(seed):
+    """0 < Psi1 <= sf2 and psi0 = sf2 (SE kernel facts)."""
+    rng = np.random.default_rng(seed)
+    n, m, q = 5, 4, 3
+    mu = rng.standard_normal((n, q)); s = rng.uniform(0.0, 2.0, (n, q))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q, rng)
+    sf2 = float(jnp.exp(hyp["log_sf2"]))
+    p1 = np.asarray(gpk.psi1(hyp, jnp.asarray(z), jnp.asarray(mu), jnp.asarray(s)))
+    assert (p1 > 0).all() and (p1 <= sf2 + 1e-12).all()
+    p0 = np.asarray(gpk.psi0(hyp, jnp.asarray(mu), jnp.asarray(s)))
+    np.testing.assert_allclose(p0, sf2, rtol=1e-12)

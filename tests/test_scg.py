@@ -1,0 +1,45 @@
+"""SCG optimiser (Moller 1993) sanity: quadratics, Rosenbrock, GP hypers."""
+import numpy as np
+
+from repro.core.scg import scg
+
+
+def test_quadratic_exact():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((6, 6))
+    A = a @ a.T + 6 * np.eye(6)
+    b = rng.standard_normal(6)
+
+    def fg(x):
+        return 0.5 * x @ A @ x - b @ x, A @ x - b
+
+    res = scg(fg, np.zeros(6), max_iters=200)
+    xstar = np.linalg.solve(A, b)
+    np.testing.assert_allclose(res.x, xstar, rtol=1e-5, atol=1e-6)
+    assert res.converged
+
+
+def test_rosenbrock():
+    def fg(x):
+        f = 100.0 * (x[1] - x[0] ** 2) ** 2 + (1 - x[0]) ** 2
+        g = np.array([
+            -400.0 * x[0] * (x[1] - x[0] ** 2) - 2 * (1 - x[0]),
+            200.0 * (x[1] - x[0] ** 2),
+        ])
+        return f, g
+
+    res = scg(fg, np.array([-1.2, 1.0]), max_iters=2000)
+    np.testing.assert_allclose(res.x, [1.0, 1.0], atol=2e-3)
+
+
+def test_monotone_history():
+    """SCG only accepts improving steps -> recorded objective is monotone."""
+    rng = np.random.default_rng(1)
+    A = np.diag(rng.uniform(0.5, 50.0, 10))
+
+    def fg(x):
+        return 0.5 * x @ A @ x, A @ x
+
+    res = scg(fg, rng.standard_normal(10), max_iters=100)
+    h = np.asarray(res.history)
+    assert (np.diff(h) <= 1e-12).all()

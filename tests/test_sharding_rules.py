@@ -1,0 +1,74 @@
+"""Logical-axis sharding resolution (pure metadata, no devices needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+class FakeMesh:
+    """Duck-typed mesh: spec_for only reads .shape (a dict)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(data=16, model=16)
+POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_tp_and_fsdp_assignment():
+    # MLP weight (d_model, d_ff): embed->data (fsdp), mlp->model (tp)
+    spec = sh.spec_for(("embed", "mlp"), (1536, 8960), MESH, sh.DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback():
+    # 12 heads of 128 dims under model=16 -> replicate (head quantum)
+    spec = sh.spec_for(("embed", "heads:128"), (1536, 1536), MESH,
+                       sh.DEFAULT_RULES)
+    assert spec == P("data")          # trailing None trimmed
+    # 32 heads shard fine
+    spec = sh.spec_for(("embed", "heads:128"), (4096, 4096), MESH,
+                       sh.DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_batch_uses_pod_then_data():
+    spec = sh.spec_for(("batch", None), (256, 4096), POD, sh.DEFAULT_RULES)
+    assert spec == P(("pod", "data"))
+    # batch=1 (long_500k): nothing divides -> fully replicated
+    spec = sh.spec_for(("batch", None), (1, 4096), POD, sh.DEFAULT_RULES)
+    assert spec == P()
+
+
+def test_axis_never_used_twice():
+    # both dims want "model": second falls back
+    spec = sh.spec_for(("mlp", "heads:64"), (1536 * 16, 64 * 16), MESH,
+                       sh.DEFAULT_RULES)
+    assert spec == P("model")         # second dim replicated
+
+
+def test_cache_seq_prefers_model_then_data():
+    # decode_32k: batch owns data; kv-cache seq goes to model
+    used_batch = sh.spec_for(("batch", "seq_shard", "kv_heads", None),
+                             (128, 32768, 2, 128), MESH, sh.DEFAULT_RULES)
+    assert used_batch == P("data", "model")
+    # long_500k B=1: batch replicated, seq takes model THEN data
+    long = sh.spec_for(("batch", "seq_shard", "kv_heads", None),
+                       (1, 2048, 1, 256), MESH, sh.DEFAULT_RULES)
+    assert long == P(None, ("model", "data"))
+
+
+def test_quantum_parsing():
+    assert sh.spec_for(("kv_heads:128",), (4096,), MESH,
+                       sh.DEFAULT_RULES) == P("model")
+    assert sh.spec_for(("kv_heads:128",), (256,), MESH,
+                       sh.DEFAULT_RULES) == P()
+
+
+def test_constrain_identity_without_mesh():
+    import jax.numpy as jnp
+    sh.set_mesh(None)
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, ("batch", None)) is x
