@@ -6,7 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
 import argparse
 import sys
 
-from . import figures
+from . import figures, streaming
 
 
 ALL = {
@@ -18,6 +18,7 @@ ALL = {
     "usps": figures.usps_reconstruction,
     "psi2": figures.psi2_variants,
     "lm": figures.lm_train_microbench,
+    "stream": streaming.streaming_map,
 }
 
 FAST_ARGS = {
@@ -29,6 +30,8 @@ FAST_ARGS = {
     "usps": dict(n_small=150, n_big=500, iters=50),
     "psi2": dict(n=2048, iters=2),
     "lm": dict(steps=3),
+    "stream": dict(n_parity=4000, n_big=60_000, m=48, block=1024,
+                   budget_gb=0.5, iters=2),
 }
 
 

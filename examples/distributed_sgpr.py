@@ -14,12 +14,12 @@ from jax.flatten_util import ravel_pytree
 from repro.core import DistributedGP
 from repro.core.scg import scg
 from repro.distributed.fault import FailureSimulator
+from repro.launch.mesh import make_compat_mesh
 
 
 def main():
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((n_dev,), ("data",))
     print(f"mesh: {n_dev} data shards")
 
     rng = np.random.default_rng(0)
@@ -34,8 +34,11 @@ def main():
         "z": jnp.asarray(z0),
     }
 
+    # chunk_size streams each shard's map in 128-row blocks: per-device
+    # memory is O(128 * m) regardless of how many rows the shard holds
+    # (drop it to None to get the monolithic map — same bound either way).
     eng = DistributedGP(mesh, data_axes=("data",), latent=False,
-                        failure_mode="rescale")
+                        failure_mode="rescale", chunk_size=128)
     data, w = eng.put_data(y=y, mu=x)
     vg = eng.make_value_and_grad(d=1, argnums=(0, 1))
     nf = jnp.asarray(float(n))

@@ -15,10 +15,11 @@ from .bound import QU, collapsed_bound, optimal_qu, predict
 from .distributed import DistributedGP
 from .gplvm import BayesianGPLVM
 from .sgpr import SGPR
-from .stats import Stats, partial_stats
+from .stats import Stats, partial_stats, partial_stats_chunked, zero_stats
 
 __all__ = [
     "bound", "distributed", "gp_kernels", "init_utils", "ref_naive", "scg",
     "stats", "QU", "collapsed_bound", "optimal_qu", "predict",
     "DistributedGP", "BayesianGPLVM", "SGPR", "Stats", "partial_stats",
+    "partial_stats_chunked", "zero_stats",
 ]

@@ -20,6 +20,24 @@ contribution inside the reduce.  ``failure_mode``:
                 gradient; the bound's n-terms keep the full n).
   * "rescale" — beyond-paper: surviving sums scaled by n/n_live, keeping the
                 statistics approximately unbiased (see benchmarks/fig7).
+
+Streaming memory model (``chunk_size``): with ``chunk_size=None`` each
+shard's map materialises all of its n_k rows' intermediates at once — for
+the GPLVM path that is the O(n_k m^2) (and transiently O(n_k m^2 q)) psi2
+broadcast, so per-device *memory*, not compute, caps n.  Setting
+``chunk_size=B`` makes the shard-local map a ``lax.scan`` over
+``ceil(n_k / B)`` fixed-size row blocks (``stats.partial_stats_chunked``),
+folding each block's Stats into a constant-size carry.  Peak live memory
+per shard becomes
+
+    O(B * (m + q + d))  [one block's intermediates]  +  O(m^2 + m d) [carry]
+
+independent of n_k, while the reduce is unchanged: still ONE psum of
+O(m^2 + m d) bytes after the scan finishes (map stays zero-communication,
+reduce stays constant-size — exactly the paper's cost model, now with a
+bounded map footprint).  ``put_data`` pads n up to a multiple of
+``n_shards * chunk_size`` so every scan step is shape-static; padded rows
+carry zero weight and contribute nothing.
 """
 from __future__ import annotations
 
@@ -33,7 +51,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from .bound import collapsed_bound
-from .stats import Stats, partial_stats
+from .stats import Stats, partial_stats_chunked
 
 try:  # jax >= 0.6 exposes shard_map at top level
     _shard_map_impl = jax.shard_map
@@ -70,8 +88,12 @@ def num_shards(mesh: Mesh, axis_names: Sequence[str]) -> int:
     return out
 
 
-def pad_and_shard(arrs: dict, n_shards: int):
+def pad_and_shard(arrs: dict, n_shards: int, block: int | None = None):
     """Pad leading dim to a multiple of n_shards; return arrays + weight vec.
+
+    With ``block`` set (the streaming path's chunk size), pads to a multiple
+    of ``n_shards * block`` instead, so each shard holds a whole number of
+    blocks and every ``lax.scan`` step in the chunked map is shape-static.
 
     The weight vector is 1 on real rows, 0 on padding — padding therefore
     contributes nothing to any statistic (see ``stats.partial_stats``).
@@ -79,8 +101,9 @@ def pad_and_shard(arrs: dict, n_shards: int):
     """
     import numpy as np
 
+    mult = n_shards * (block or 1)
     n = next(iter(arrs.values())).shape[0]
-    pad = (-n) % n_shards
+    pad = (-n) % mult
     out = {}
     for k, a in arrs.items():
         widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
@@ -101,12 +124,19 @@ class DistributedGP:
         latent: bool = False,
         failure_mode: str = "drop",
         psi2_fn=None,
+        chunk_size: int | None = None,
     ):
+        """``chunk_size``: if set, each shard's map streams its rows in
+        blocks of this many points (see the module docstring's streaming
+        memory model); ``None`` keeps the monolithic all-rows-at-once map."""
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.latent = latent
         self.failure_mode = failure_mode
         self.psi2_fn = psi2_fn
+        self.chunk_size = chunk_size
         self.n_shards = num_shards(mesh, self.data_axes)
         self._data_spec = P(self.data_axes)
         self._rep_spec = P()
@@ -120,23 +150,28 @@ class DistributedGP:
 
     def put_data(self, **arrs):
         """Pad + shard host arrays onto the mesh. Returns (dict, weights)."""
-        padded, w = pad_and_shard(arrs, self.n_shards)
+        padded, w = pad_and_shard(arrs, self.n_shards, block=self.chunk_size)
         sh = self.data_sharding()
         out = {k: jax.device_put(jnp.asarray(v), sh) for k, v in padded.items()}
         wdev = jax.device_put(jnp.asarray(w), sh)
         return out, wdev
 
     # -- the SPMD program ---------------------------------------------------
+    def _local_stats(self, hyp, z, y, mu, s, w) -> Stats:
+        """Shard-local map: monolithic (chunk_size=None) or streamed."""
+        return partial_stats_chunked(
+            hyp, z, y, mu, s,
+            weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
+            block_size=self.chunk_size,
+        )
+
     def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d):
         """Runs per-shard under shard_map. Returns the (replicated) bound."""
         idx = _flat_shard_index(self.mesh, self.data_axes)
         alive = fmask[idx]
         w = w * alive
 
-        st = partial_stats(
-            hyp, z, y, mu, s,
-            weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
-        )
+        st = self._local_stats(hyp, z, y, mu, s, w)
         # --- the reduce: constant-size collective, independent of n --------
         st = Stats(*(lax.psum(t, self.data_axes) for t in st))
 
@@ -189,10 +224,7 @@ class DistributedGP:
         def _stats(hyp, z, y, mu, s, w, fmask):
             idx = _flat_shard_index(self.mesh, self.data_axes)
             w = w * fmask[idx]
-            st = partial_stats(
-                hyp, z, y, mu, s,
-                weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
-            )
+            st = self._local_stats(hyp, z, y, mu, s, w)
             return Stats(*(lax.psum(t, self.data_axes) for t in st))
 
         f = shard_map(

@@ -24,16 +24,23 @@ from jax.flatten_util import ravel_pytree
 from . import bound as bound_mod
 from . import init_utils
 from .scg import scg
-from .stats import partial_stats
+from .stats import partial_stats_chunked
 
 
 class BayesianGPLVM:
+    """``chunk_size``: if set, the map step streams rows in blocks of this
+    many points (``stats.partial_stats_chunked``), bounding peak memory at
+    O(chunk_size * m^2) instead of the monolithic O(n * m^2) psi2 tensor —
+    the GPLVM path's dominant allocation. Same bound to float precision."""
+
     def __init__(self, y: np.ndarray, q: int, num_inducing: int = 50,
-                 jitter: float = 1e-6, seed: int = 0, s0: float = 0.5):
+                 jitter: float = 1e-6, seed: int = 0, s0: float = 0.5,
+                 chunk_size: int | None = None):
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.d = y.shape
         self.q = q
         self.jitter = jitter
+        self.chunk_size = chunk_size
         mu0 = init_utils.pca(np.asarray(y), q)
         z0 = init_utils.kmeans(mu0, num_inducing, seed=seed)
         hyp0 = init_utils.default_hyp(np.asarray(y), q)
@@ -45,9 +52,9 @@ class BayesianGPLVM:
         }
 
         def neg_bound(params, y_):
-            st = partial_stats(
+            st = self._map_stats(
                 params["hyp"], params["z"], y_,
-                params["mu"], s=jnp.exp(params["log_s"]), latent=True)
+                params["mu"], jnp.exp(params["log_s"]))
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
                                               self.d, jitter=self.jitter)
 
@@ -57,6 +64,10 @@ class BayesianGPLVM:
             lambda g, l, y_: neg_bound({**g, **l}, y_)))
         self._neg_vg_local = jax.jit(jax.value_and_grad(
             lambda l, g, y_: neg_bound({**g, **l}, y_)))
+
+    def _map_stats(self, hyp, z, y, mu, s):
+        return partial_stats_chunked(hyp, z, y, mu, s=s, latent=True,
+                                     block_size=self.chunk_size)
 
     def log_bound(self, params=None) -> float:
         params = self.params if params is None else params
@@ -120,9 +131,9 @@ class BayesianGPLVM:
 
     # -- posterior / diagnostics ---------------------------------------------
     def _stats(self):
-        return partial_stats(
+        return self._map_stats(
             self.params["hyp"], self.params["z"], self.y,
-            self.params["mu"], s=jnp.exp(self.params["log_s"]), latent=True)
+            self.params["mu"], jnp.exp(self.params["log_s"]))
 
     def qu(self) -> bound_mod.QU:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],

@@ -18,20 +18,27 @@ from jax.flatten_util import ravel_pytree
 from . import bound as bound_mod
 from . import init_utils
 from .scg import scg
-from .stats import partial_stats
+from .stats import partial_stats_chunked
 
 
 class SGPR:
-    """Sparse GP regression with SE-ARD kernel and inducing points Z."""
+    """Sparse GP regression with SE-ARD kernel and inducing points Z.
+
+    ``chunk_size``: if set, the map step streams the n rows in blocks of
+    this many points (``stats.partial_stats_chunked``) so peak memory is
+    O(chunk_size * m) instead of O(n * m) — same bound to float precision.
+    """
 
     def __init__(self, x: np.ndarray, y: np.ndarray, num_inducing: int = 50,
                  hyp: dict | None = None, z: np.ndarray | None = None,
-                 jitter: float = 1e-6, seed: int = 0):
+                 jitter: float = 1e-6, seed: int = 0,
+                 chunk_size: int | None = None):
         self.x = jnp.asarray(x, jnp.float64)
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.q = x.shape
         self.d = y.shape[1]
         self.jitter = jitter
+        self.chunk_size = chunk_size
         z0 = init_utils.kmeans(np.asarray(x), num_inducing, seed=seed) if z is None else z
         hyp0 = init_utils.default_hyp(np.asarray(y), self.q) if hyp is None else hyp
         self.params = {
@@ -41,11 +48,15 @@ class SGPR:
         self._stats_cache = None
 
         def neg_bound(params, x_, y_):
-            st = partial_stats(params["hyp"], params["z"], y_, x_, s=None, latent=False)
+            st = self._map_stats(params["hyp"], params["z"], y_, x_)
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st, self.d,
                                               jitter=self.jitter)
 
         self._neg_vg = jax.jit(jax.value_and_grad(neg_bound))
+
+    def _map_stats(self, hyp, z, y, x):
+        return partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                                     block_size=self.chunk_size)
 
     # -- objective ----------------------------------------------------------
     def log_bound(self, params=None) -> float:
@@ -73,9 +84,8 @@ class SGPR:
     # -- posterior ----------------------------------------------------------
     def _stats(self):
         if self._stats_cache is None:
-            self._stats_cache = partial_stats(
-                self.params["hyp"], self.params["z"], self.y, self.x,
-                s=None, latent=False)
+            self._stats_cache = self._map_stats(
+                self.params["hyp"], self.params["z"], self.y, self.x)
         return self._stats_cache
 
     def qu(self) -> bound_mod.QU:

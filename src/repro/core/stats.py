@@ -95,6 +95,91 @@ def partial_stats(
     return Stats(A=a, B=b, C=c, D=d_stat, KL=kl, n=jnp.sum(w))
 
 
+def zero_stats(m: int, d: int, dtype=jnp.float64) -> Stats:
+    """The additive identity of the Stats monoid — a reduce/fold init for
+    host-side accumulation. (The scan in ``partial_stats_chunked`` builds
+    its own carry with scalars promoted to rank 1; see the note there.)"""
+    zf = jnp.zeros((), dtype)
+    return Stats(A=zf, B=zf, C=jnp.zeros((m, d), dtype),
+                 D=jnp.zeros((m, m), dtype), KL=zf, n=zf)
+
+
+def partial_stats_chunked(
+    hyp: dict,
+    z: Array,
+    y: Array,
+    mu: Array,
+    s: Array | None = None,
+    weights: Array | None = None,
+    latent: bool = True,
+    psi2_fn=None,
+    block_size: int | None = 1024,
+) -> Stats:
+    """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
+
+    ``block_size=None`` delegates to the monolithic :func:`partial_stats`
+    (so callers can dispatch on a single optional chunk-size setting).
+
+    Mathematically identical to :func:`partial_stats` (every statistic is a
+    plain sum over points), but ``lax.scan``s over ``ceil(n_k / block_size)``
+    blocks of ``block_size`` rows, folding each block's Stats into a
+    constant-size carry.  Peak live memory is therefore
+    O(block_size * (m + q + d)) + O(m^2) — *independent of n_k* — instead of
+    the monolithic path's O(n_k m^2) (the GPLVM psi2 broadcast) or
+    O(n_k m) (regression).  This is what lets a shard stream more rows than
+    fit in its device buffer (paper §5: the 2M-record flight experiment).
+
+    Rows are padded up to a multiple of ``block_size`` with zero weight, so
+    every scan step has identical shapes and padding contributes nothing.
+    ``psi2_fn`` (e.g. the Pallas psi-stats kernel) is invoked once per block
+    on block-sized operands.
+    """
+    n_k = y.shape[0]
+    if block_size is None or n_k <= block_size:
+        # Single block (or streaming disabled) — no scan machinery needed.
+        return partial_stats(hyp, z, y, mu, s, weights=weights,
+                             latent=latent, psi2_fn=psi2_fn)
+
+    w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
+    pad = (-n_k) % block_size
+    nb = (n_k + pad) // block_size
+
+    def blocks(a, cval=0.0):
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, widths, constant_values=cval).reshape(
+            (nb, block_size) + a.shape[1:])
+
+    y_b, mu_b, w_b = blocks(y), blocks(mu), blocks(w)
+    # q(X) variances padded with 1s: log-safe, and masked out by w=0 anyway.
+    s_b = None if s is None else blocks(s, cval=1.0)
+
+    def block_stats(yc, muc, sc, wc):
+        return partial_stats(hyp, z, yc, muc, sc, weights=wc,
+                             latent=latent, psi2_fn=psi2_fn)
+
+    # The carry keeps every leaf at rank >= 1 (scalars as (1,)): rank-0 scan
+    # residuals trip shard_map's residual promotion on some JAX versions
+    # when the chunked map runs (and is differentiated) inside the
+    # distributed engine.
+    def body(carry, xs):
+        if s is None:
+            yc, muc, wc = xs
+            st = block_stats(yc, muc, None, wc)
+        else:
+            yc, muc, sc, wc = xs
+            st = block_stats(yc, muc, sc, wc)
+        return Stats(*(c + jnp.atleast_1d(t) for c, t in zip(carry, st))), None
+
+    xs = (y_b, mu_b, w_b) if s is None else (y_b, mu_b, s_b, w_b)
+    # Carry init matches one block's output dtypes exactly (abstract eval —
+    # works for any psi2_fn backend, including the Pallas kernel).
+    shapes = jax.eval_shape(
+        block_stats, y_b[0], mu_b[0], None if s is None else s_b[0], w_b[0])
+    init = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
+    out, _ = jax.lax.scan(body, init, xs)
+    return Stats(*(t.reshape(sh.shape) for t, sh in zip(out, shapes)))
+
+
 def reduce_stats(parts: list[Stats]) -> Stats:
     """Sequential reduce (the single-host analogue of the paper's reduce)."""
     out = parts[0]

@@ -59,11 +59,16 @@ def collective_bytes(hlo_text: str) -> dict:
     return dict(out)
 
 
-def cost_stats(compiled) -> dict:
-    ca = compiled.cost_analysis()
+def normalize_cost_analysis(ca) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on newer JAX but a
+    one-element list of dicts on older versions — normalize to a dict."""
     if isinstance(ca, (list, tuple)):
-        ca = ca[0]
-    ca = dict(ca) if ca else {}
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def cost_stats(compiled) -> dict:
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -205,10 +205,12 @@ def moe_sharded(cfg, p, x: Array):
 
 
 def shlib_shard_map(f, mesh, in_specs, out_specs):
+    # jax.shard_map only exists (with check_vma) on newer JAX; older
+    # versions raise AttributeError on access or TypeError on the kwarg.
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)
-    except TypeError:  # pragma: no cover
+    except (AttributeError, TypeError):  # pragma: no cover
         from jax.experimental.shard_map import shard_map
         return shard_map(f, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)

@@ -100,15 +100,29 @@ def ssd_scan(x: Array, a: Array, b_in: Array, c_in: Array, chunk: int,
     s0 = (jnp.zeros((bsz, h, p_dim, n), jnp.float32)
           if init_state is None else init_state.astype(jnp.float32))
 
-    def step(carry, inp):
-        dec, st = inp                                        # (B,H), (B,H,P,N)
-        new = dec[..., None, None] * carry + st
-        return new, carry                                    # emit state BEFORE chunk
+    if jax.config.jax_enable_x64:
+        # Statically unrolled: under x64 the lax.scan lowering's int64 loop
+        # counter trips an XLA SPMD verifier bug (s64 index vs s32 shard
+        # offset) in the partitioned backward pass. nc = ceil(T/chunk) is
+        # compile-time and stays small for shipped configs (<= 32 at
+        # T=4096, ssm_chunk=128), so the unrolled HLO is bounded.
+        carry = s0
+        prev = []
+        for ci in range(nc):
+            prev.append(carry)                               # state BEFORE chunk
+            carry = (chunk_decay[..., ci][..., None, None] * carry
+                     + states[:, ci])
+        final_state = carry
+        prev_states = jnp.stack(prev, axis=1)                # (B,nc,H,P,N)
+    else:
+        def step(c, inp):
+            dec, st = inp                                    # (B,H), (B,H,P,N)
+            return dec[..., None, None] * c + st, c          # emit BEFORE chunk
 
-    final_state, prev_states = jax.lax.scan(
-        step, s0, (chunk_decay.transpose(2, 0, 1),
-                   states.transpose(1, 0, 2, 3, 4)))
-    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+        final_state, prev_states = jax.lax.scan(
+            step, s0, (chunk_decay.transpose(2, 0, 1),
+                       states.transpose(1, 0, 2, 3, 4)))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
 
     # inter-chunk contribution
     state_decay = jnp.exp(acum)                              # (B,H,nc,cs)

@@ -266,7 +266,7 @@ def _unembed_weight(cfg, params):
 def _encode(cfg, params, frames):
     cd = _dtype(cfg.compute_dtype)
     x = frames.astype(cd)
-    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
     enc = params["encoder"]
 
     def body(x_in, p):
@@ -287,7 +287,7 @@ def _encode(cfg, params, frames):
 def forward_train(cfg, params, batch) -> tuple[Array, dict]:
     """batch: tokens (B,T), labels (B,T) [, frames (B,F,D)] -> (loss, metrics)."""
     tokens = batch["tokens"]
-    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
     enc_out = None
     if cfg.family == "encdec":
         enc_out = _encode(cfg, params, batch["frames"])
@@ -310,7 +310,7 @@ def forward_train(cfg, params, batch) -> tuple[Array, dict]:
 def forward_prefill(cfg, params, batch):
     """Prefill: full-sequence pass that returns (last-token logits, caches)."""
     tokens = batch["tokens"]
-    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
     enc_out = None
     if cfg.family == "encdec":
         enc_out = _encode(cfg, params, batch["frames"])

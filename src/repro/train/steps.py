@@ -50,6 +50,27 @@ def make_train_step(cfg: ModelConfig, adam_cfg: adam_mod.AdamConfig | None = Non
     return train_step
 
 
+def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
+                       latent: bool = False, failure_mode: str = "drop",
+                       psi2_fn=None, chunk_size: int | None = None,
+                       argnums=(0, 1)):
+    """Distributed GP map-reduce analogue of ``make_train_step``.
+
+    Returns ``(engine, step)`` where ``step`` is the jitted
+    (value, grad) of the negative collapsed bound —
+    ``step(hyp, z, mu, s, y, w, fmask, n_full)``.  ``chunk_size`` streams
+    each shard's map in fixed-size row blocks so per-device memory is
+    O(chunk_size), independent of the shard's row count (see
+    ``core.distributed`` for the streaming memory model).
+    """
+    from ..core.distributed import DistributedGP
+
+    eng = DistributedGP(mesh, data_axes=data_axes, latent=latent,
+                        failure_mode=failure_mode, psi2_fn=psi2_fn,
+                        chunk_size=chunk_size)
+    return eng, eng.make_value_and_grad(d, argnums=argnums)
+
+
 def make_prefill_step(cfg: ModelConfig):
     def prefill_step(params, batch):
         return tf.forward_prefill(cfg, params, batch)

@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import DistributedGP
 from repro.core.bound import collapsed_bound
 from repro.core.stats import Stats, partial_stats, reduce_stats
+from repro.launch.mesh import make_compat_mesh
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -55,8 +56,7 @@ def test_manual_sharding_equals_sequential(rng):
 
 def test_single_device_mesh_runs(rng):
     """The engine degrades gracefully to a 1-device mesh (sequential)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((1,), ("data",))
     eng = DistributedGP(mesh, data_axes=("data",), latent=False)
     n, m, q, d = 20, 5, 2, 1
     x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))

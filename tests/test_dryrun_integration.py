@@ -16,8 +16,8 @@ from repro.distributed import sharding as shlib
 from repro.launch.hlo_analyzer import analyze
 from repro.train import steps
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_compat_mesh
+mesh = make_compat_mesh((2, 2), ("data", "model"))
 for arch in ("llama3.2-1b", "qwen3-moe-235b-a22b", "mamba2-370m"):
     cfg = all_configs()[arch].reduced()
     shape = ShapeSpec("tiny_train", seq_len=32, global_batch=4, kind="train")

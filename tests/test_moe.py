@@ -18,8 +18,8 @@ cfg = all_configs()["qwen3-moe-235b-a22b"].reduced()
 cfg = dataclasses.replace(cfg, moe_impl="sharded", num_experts=8,
                           experts_per_token=2, moe_d_ff=32,
                           capacity_factor=8.0)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_compat_mesh
+mesh = make_compat_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)), jnp.float32)
 p = {"router": jnp.asarray(rng.standard_normal((cfg.d_model, 8)) * .1,

@@ -1,0 +1,177 @@
+"""Streaming map-step engine: chunked ≡ monolithic statistics and bounds.
+
+The chunked accumulator (stats.partial_stats_chunked) must reproduce
+partial_stats exactly (same sums, different association order — float64
+keeps them within ~1e-12), through jit and grad, on both the regression
+and latent (GPLVM) paths, with weights and non-divisible block sizes.
+Multi-device DistributedGP(chunk_size=...) parity lives in _dist_worker.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BayesianGPLVM, SGPR
+from repro.core.bound import collapsed_bound
+from repro.core.distributed import DistributedGP, pad_and_shard
+from repro.core.stats import partial_stats, partial_stats_chunked, zero_stats
+from repro.launch.mesh import make_compat_mesh
+
+from conftest import make_regression
+
+
+def _mk_hyp(q):
+    return {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.full((q,), 0.1),
+            "log_beta": jnp.asarray(1.0)}
+
+
+def _assert_stats_close(a, b, rtol=1e-10, atol=1e-12):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("block", [1, 7, 16, 1000])
+def test_chunked_equals_monolithic_regression(rng, block):
+    n, m, q, d = 53, 6, 2, 3  # n deliberately not a multiple of any block
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    full = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                         s=None, latent=False)
+    ch = partial_stats_chunked(hyp, jnp.asarray(z), jnp.asarray(y),
+                               jnp.asarray(x), s=None, latent=False,
+                               block_size=block)
+    _assert_stats_close(full, ch)
+
+
+@pytest.mark.parametrize("block", [5, 32])
+def test_chunked_equals_monolithic_latent_with_weights(rng, block):
+    n, m, q, d = 41, 5, 3, 2
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    s = rng.uniform(0.05, 0.7, (n, q)); z = rng.standard_normal((m, q))
+    w = np.ones(n); w[33:] = 0.0  # masked tail, as distributed padding does
+    hyp = _mk_hyp(q)
+    full = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                         s=jnp.asarray(s), weights=jnp.asarray(w), latent=True)
+    ch = partial_stats_chunked(hyp, jnp.asarray(z), jnp.asarray(y),
+                               jnp.asarray(x), s=jnp.asarray(s),
+                               weights=jnp.asarray(w), latent=True,
+                               block_size=block)
+    _assert_stats_close(full, ch)
+
+
+def test_chunked_bound_and_grad_parity(rng):
+    """Bound + hyper/Z gradients through the scan match the monolithic path."""
+    n, m, q, d = 60, 7, 2, 2
+    x, y = make_regression(rng, n=n, q=q, d=d)
+    s = rng.uniform(0.05, 0.5, (n, q)); z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+
+    def neg(h, zz, chunked):
+        stats_fn = (
+            (lambda *a, **k: partial_stats_chunked(*a, block_size=13, **k))
+            if chunked else partial_stats)
+        st = stats_fn(h, zz, jnp.asarray(y), jnp.asarray(x),
+                      s=jnp.asarray(s), latent=True)
+        return -collapsed_bound(h, zz, st, d)
+
+    v0, (gh0, gz0) = jax.value_and_grad(
+        lambda h, zz: neg(h, zz, False), argnums=(0, 1))(hyp, jnp.asarray(z))
+    v1, (gh1, gz1) = jax.jit(jax.value_and_grad(
+        lambda h, zz: neg(h, zz, True), argnums=(0, 1)))(hyp, jnp.asarray(z))
+    assert abs(float(v1) - float(v0)) < 1e-8 * abs(float(v0))
+    np.testing.assert_allclose(np.asarray(gz1), np.asarray(gz0),
+                               rtol=1e-8, atol=1e-10)
+    for k in gh0:
+        np.testing.assert_allclose(np.asarray(gh1[k]), np.asarray(gh0[k]),
+                                   rtol=1e-8, atol=1e-10)
+
+
+def test_chunked_psi2_fn_hook_per_block(rng):
+    """A custom psi2 backend (the MXU jnp reformulation) plugs into each
+    scan block and still reproduces the monolithic statistics."""
+    from repro.core import gp_kernels as gpk
+
+    n, m, q, d = 47, 6, 2, 2
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    s = rng.uniform(0.05, 0.5, (n, q)); z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    full = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                         s=jnp.asarray(s), latent=True)
+    ch = partial_stats_chunked(
+        hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+        s=jnp.asarray(s), latent=True,
+        psi2_fn=lambda h, zz, mu, sv, w: gpk.psi2_mxu(h, zz, mu, sv, w,
+                                                      chunk=8),
+        block_size=16)
+    _assert_stats_close(full, ch, rtol=1e-9, atol=1e-11)
+
+
+def test_zero_stats_is_identity(rng):
+    n, m, q, d = 9, 4, 2, 3
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    st = partial_stats(_mk_hyp(q), jnp.asarray(z), jnp.asarray(y),
+                       jnp.asarray(x), s=None, latent=False)
+    _assert_stats_close(st, zero_stats(m, d) + st, rtol=0, atol=0)
+
+
+def test_pad_and_shard_block_multiple():
+    arrs = {"y": np.ones((101, 3)), "mu": np.zeros((101, 2)),
+            "s": np.full((101, 2), 0.3)}
+    out, w = pad_and_shard(arrs, n_shards=4, block=16)
+    assert out["y"].shape[0] == 128  # next multiple of 4*16
+    assert w.sum() == 101 and w.shape == (128,)
+    assert (out["s"][101:] == 1.0).all()  # variance padding stays log-safe
+
+
+def test_sgpr_gplvm_chunk_size_bound_parity(rng):
+    x, y = make_regression(rng, n=70, q=2, d=2)
+    mono = SGPR(x, y, num_inducing=10, seed=0)
+    stream = SGPR(x, y, num_inducing=10, seed=0, chunk_size=16)
+    np.testing.assert_allclose(stream.log_bound(), mono.log_bound(),
+                               rtol=1e-10)
+    mean0, _ = mono.predict(x[:5])
+    mean1, _ = stream.predict(x[:5])
+    np.testing.assert_allclose(mean1, mean0, rtol=1e-8, atol=1e-10)
+
+    lv_mono = BayesianGPLVM(y, q=2, num_inducing=8, seed=1)
+    lv_stream = BayesianGPLVM(y, q=2, num_inducing=8, seed=1, chunk_size=16)
+    np.testing.assert_allclose(lv_stream.log_bound(), lv_mono.log_bound(),
+                               rtol=1e-10)
+
+
+def test_distributed_chunked_single_device_parity(rng):
+    """chunk_size on a 1-device mesh == sequential bound (multi-device
+    parity runs in the subprocess worker)."""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d = 37, 5, 2, 1
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    hyp = _mk_hyp(q)
+    eng = DistributedGP(mesh, data_axes=("data",), latent=False, chunk_size=8)
+    data, w = eng.put_data(y=y, mu=x)
+    assert data["y"].shape[0] == 40  # padded to a whole number of blocks
+    vg = eng.make_value_and_grad(d)
+    v, _ = vg(hyp, jnp.asarray(z), data["mu"], None, data["y"], w,
+              jnp.ones((1,)), jnp.asarray(float(n)))
+    st = partial_stats(hyp, jnp.asarray(z), jnp.asarray(y), jnp.asarray(x),
+                       s=None, latent=False)
+    ref = -collapsed_bound(hyp, jnp.asarray(z), st, d)
+    assert abs(float(v) - float(ref)) < 1e-10 * max(1.0, abs(float(ref)))
+
+
+def test_make_gp_train_step_smoke(rng):
+    from repro.train.steps import make_gp_train_step
+
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d = 24, 4, 2, 1
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = rng.standard_normal((m, q))
+    eng, step = make_gp_train_step(mesh, d, chunk_size=8)
+    data, w = eng.put_data(y=y, mu=x)
+    v, (gh, gz) = step(_mk_hyp(q), jnp.asarray(z), data["mu"], None,
+                       data["y"], w, jnp.ones((1,)), jnp.asarray(float(n)))
+    assert np.isfinite(float(v))
+    assert np.isfinite(np.asarray(gz)).all()
