@@ -19,6 +19,7 @@ ALL = {
     "psi2": figures.psi2_variants,
     "lm": figures.lm_train_microbench,
     "stream": streaming.streaming_map,
+    "regmap": streaming.reg_map_backends,
 }
 
 FAST_ARGS = {
@@ -32,12 +33,17 @@ FAST_ARGS = {
     "lm": dict(steps=3),
     "stream": dict(n_parity=4000, n_big=60_000, m=48, block=1024,
                    budget_gb=0.5, iters=2),
+    "regmap": dict(n=4096, m=32, block=1024, iters=2),
 }
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", default=None)
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="--only targets: " + " ".join(ALL))
+    ap.add_argument("--only", nargs="*", default=None, choices=list(ALL),
+                    metavar="TARGET",
+                    help="benchmarks to run (default: all; see list below)")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     names = args.only or list(ALL)

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.bound import collapsed_bound
 from repro.core.stats import partial_stats, partial_stats_chunked
+from repro.kernels.reg_stats import reg_stats_fn_for_engine
 
 from .gp_common import default_hyp
 
@@ -122,4 +123,66 @@ def streaming_map(n_parity=20_000, n_big=200_000, m=64, q=2, d=2,
           f"{t_mono_big / 2**30:.2f} GiB temp (> {budget_gb:.1f} GiB budget "
           f"-> OOM); streamed needs {t_stream_big / 2**20:.1f} MiB and ran "
           f"in {dt * 1e3:.0f} ms/iter (bound={b:.2f})")
+    return rows
+
+
+def reg_map_backends(n=20_000, m=64, q=3, d=2, block=2048, iters=3):
+    """Regression map step, XLA vs fused-Pallas backend: wall-clock time and
+    compiled peak temp bytes per backend, plus bound parity.
+
+    Off-TPU the fused kernel runs in interpret mode (Pallas lowered through
+    XLA on host), so the CPU timing is a correctness/footprint proxy — the
+    HBM-traffic win (the (n, m) slab never leaving VMEM) shows on TPU.
+    """
+    rng = np.random.default_rng(7)
+    hyp = default_hyp(q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    fused_fn = reg_stats_fn_for_engine(block_n=128, block_m=32)
+
+    def mk_map(reg_stats_fn, block_size):
+        def f(y_, x_, z_):
+            return partial_stats_chunked(hyp, z_, y_, x_, s=None,
+                                         latent=False,
+                                         reg_stats_fn=reg_stats_fn,
+                                         block_size=block_size)
+        return f
+
+    backends = {
+        "xla_mono": mk_map(None, None),
+        "xla_stream": mk_map(None, block),
+        "fused_stream": mk_map(fused_fn, block),
+    }
+    f64 = jnp.float64
+    avals = (jax.ShapeDtypeStruct((n, d), f64),
+             jax.ShapeDtypeStruct((n, q), f64),
+             jax.ShapeDtypeStruct((m, q), f64))
+    rows = []
+    bound_ref = None
+    # Off-TPU the fused kernel interprets in the caller's f64 (f64-level
+    # parity); on TPU it computes in f32, so parity is f32-level there.
+    fused_tol = 1e-4 if jax.default_backend() == "tpu" else 1e-8
+    for name, fn in backends.items():
+        jfn = jax.jit(fn)
+        st = jax.block_until_ready(jfn(y, x, z))
+        bound = float(collapsed_bound(hyp, z, st, d))
+        if bound_ref is None:
+            bound_ref = bound
+        rel = abs(bound - bound_ref) / abs(bound_ref)
+        tol = fused_tol if name.startswith("fused") else 1e-8
+        assert rel < tol, f"{name} bound diverged: rel={rel:.2e}"
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(y, x, z))
+            ts.append(time.perf_counter() - t0)
+        dt = float(np.median(ts))
+        tb = _temp_bytes(fn, *avals)
+        tb_s = "n/a" if tb is None else str(tb)
+        rows.append((f"regmap/{name}_n={n}", dt * 1e6,
+                     f"temp_bytes={tb_s};bound_rel={rel:.1e}"))
+        print(f"  {name:>13}: map {dt * 1e3:8.2f} ms/iter  "
+              f"temp={'n/a' if tb is None else f'{tb / 2**20:.1f} MiB'}  "
+              f"bound_rel={rel:.1e}")
     return rows

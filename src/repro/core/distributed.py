@@ -124,18 +124,37 @@ class DistributedGP:
         latent: bool = False,
         failure_mode: str = "drop",
         psi2_fn=None,
+        reg_stats_fn=None,
         chunk_size: int | None = None,
+        kernel_backend: str = "xla",
     ):
         """``chunk_size``: if set, each shard's map streams its rows in
         blocks of this many points (see the module docstring's streaming
-        memory model); ``None`` keeps the monolithic all-rows-at-once map."""
+        memory model); ``None`` keeps the monolithic all-rows-at-once map.
+
+        ``kernel_backend``: "xla" (default) keeps the monolithic jnp map;
+        "pallas" routes the map's hot accumulation through the fused Pallas
+        kernels — ``kernels.reg_stats`` on the regression path and
+        ``kernels.psi_stats`` on the latent path — so the per-block kernel
+        slab stays in VMEM.  Explicit ``psi2_fn``/``reg_stats_fn`` hooks
+        override the backend's choice."""
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if kernel_backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
+        if kernel_backend == "pallas":
+            from ..kernels.psi_stats import psi2_fn_for_engine
+            from ..kernels.reg_stats import reg_stats_fn_for_engine
+            psi2_fn = psi2_fn or psi2_fn_for_engine()
+            reg_stats_fn = reg_stats_fn or reg_stats_fn_for_engine()
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.latent = latent
         self.failure_mode = failure_mode
         self.psi2_fn = psi2_fn
+        self.reg_stats_fn = reg_stats_fn
+        self.kernel_backend = kernel_backend
         self.chunk_size = chunk_size
         self.n_shards = num_shards(mesh, self.data_axes)
         self._data_spec = P(self.data_axes)
@@ -162,7 +181,7 @@ class DistributedGP:
         return partial_stats_chunked(
             hyp, z, y, mu, s,
             weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
-            block_size=self.chunk_size,
+            reg_stats_fn=self.reg_stats_fn, block_size=self.chunk_size,
         )
 
     def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d):

@@ -27,18 +27,32 @@ class SGPR:
     ``chunk_size``: if set, the map step streams the n rows in blocks of
     this many points (``stats.partial_stats_chunked``) so peak memory is
     O(chunk_size * m) instead of O(n * m) — same bound to float precision.
+
+    ``kernel_backend``: "xla" (default) or "pallas" — the latter fuses the
+    map's kernel-slab evaluation and both contractions into one Pallas pass
+    (``kernels.reg_stats``), so the (n, m) slab never round-trips HBM.
     """
 
     def __init__(self, x: np.ndarray, y: np.ndarray, num_inducing: int = 50,
                  hyp: dict | None = None, z: np.ndarray | None = None,
                  jitter: float = 1e-6, seed: int = 0,
-                 chunk_size: int | None = None):
+                 chunk_size: int | None = None,
+                 kernel_backend: str = "xla"):
         self.x = jnp.asarray(x, jnp.float64)
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.q = x.shape
         self.d = y.shape[1]
         self.jitter = jitter
         self.chunk_size = chunk_size
+        if kernel_backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
+        self.kernel_backend = kernel_backend
+        if kernel_backend == "pallas":
+            from ..kernels.reg_stats import reg_stats_fn_for_engine
+            self._reg_stats_fn = reg_stats_fn_for_engine()
+        else:
+            self._reg_stats_fn = None
         z0 = init_utils.kmeans(np.asarray(x), num_inducing, seed=seed) if z is None else z
         hyp0 = init_utils.default_hyp(np.asarray(y), self.q) if hyp is None else hyp
         self.params = {
@@ -56,6 +70,7 @@ class SGPR:
 
     def _map_stats(self, hyp, z, y, x):
         return partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                                     reg_stats_fn=self._reg_stats_fn,
                                      block_size=self.chunk_size)
 
     # -- objective ----------------------------------------------------------

@@ -28,6 +28,19 @@ from . import gp_kernels as gpk
 Array = jax.Array
 
 
+def reg_stats_dense(hyp: dict, z: Array, x: Array, y: Array, w: Array):
+    """Monolithic XLA regression statistics ``(b, C, D)`` — the canonical
+    map math shared by :func:`partial_stats` (``s is None`` branch) and the
+    fused Pallas op's custom_vjp backward (``kernels.reg_stats``).
+    Materialises the (n, m) kernel slab; the fused kernel is the version
+    that does not."""
+    knm = gpk.ard_kernel(hyp, x, z)                            # (n, m)
+    b = jnp.sum(w * gpk.ard_kdiag(hyp, x))
+    c = knm.T @ (w[:, None] * y)                               # (m, d)
+    d_stat = (knm * w[:, None]).T @ knm                        # (m, m)
+    return b, c, d_stat
+
+
 class Stats(NamedTuple):
     """Sufficient statistics of the collapsed bound. All sums over points."""
 
@@ -54,6 +67,7 @@ def partial_stats(
     weights: Array | None = None,
     latent: bool = True,
     psi2_fn=None,
+    reg_stats_fn=None,
 ) -> Stats:
     """Compute the shard-local statistics (the map function).
 
@@ -66,6 +80,9 @@ def partial_stats(
       weights: (n_k,) 0/1 mask (padding / failed points). None = all ones.
       latent: include the KL term (GPLVM) or not (regression).
       psi2_fn: override for the psi2 accumulation (e.g. the Pallas kernel).
+      reg_stats_fn: override for the regression (B, C, D) accumulation —
+        ``fn(hyp, z, mu, y, w) -> (b, c, d)`` (e.g. the fused Pallas kernel,
+        which never materialises the (n, m) slab in HBM).
     """
     n_k = y.shape[0]
     w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
@@ -73,11 +90,9 @@ def partial_stats(
     if s is None:
         # Regression: q(X_i) is a delta at the observed inputs. Use the exact
         # kernel forms (cheaper + numerically exact) rather than S->0 limits.
-        knm = gpk.ard_kernel(hyp, mu, z)                       # (n, m)
         a = jnp.sum(w * jnp.sum(y * y, axis=-1))
-        b = jnp.sum(w * gpk.ard_kdiag(hyp, mu))
-        c = knm.T @ (w[:, None] * y)                           # (m, d)
-        d_stat = (knm * w[:, None]).T @ knm                    # (m, m)
+        fn = reg_stats_dense if reg_stats_fn is None else reg_stats_fn
+        b, c, d_stat = fn(hyp, z, mu, y, w)
         kl = jnp.zeros((), y.dtype)
     else:
         a = jnp.sum(w * jnp.sum(y * y, axis=-1))
@@ -113,6 +128,7 @@ def partial_stats_chunked(
     weights: Array | None = None,
     latent: bool = True,
     psi2_fn=None,
+    reg_stats_fn=None,
     block_size: int | None = 1024,
 ) -> Stats:
     """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
@@ -131,14 +147,15 @@ def partial_stats_chunked(
 
     Rows are padded up to a multiple of ``block_size`` with zero weight, so
     every scan step has identical shapes and padding contributes nothing.
-    ``psi2_fn`` (e.g. the Pallas psi-stats kernel) is invoked once per block
-    on block-sized operands.
+    ``psi2_fn`` / ``reg_stats_fn`` (e.g. the Pallas kernels) are invoked once
+    per block on block-sized operands.
     """
     n_k = y.shape[0]
     if block_size is None or n_k <= block_size:
         # Single block (or streaming disabled) — no scan machinery needed.
         return partial_stats(hyp, z, y, mu, s, weights=weights,
-                             latent=latent, psi2_fn=psi2_fn)
+                             latent=latent, psi2_fn=psi2_fn,
+                             reg_stats_fn=reg_stats_fn)
 
     w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
     pad = (-n_k) % block_size
@@ -155,7 +172,8 @@ def partial_stats_chunked(
 
     def block_stats(yc, muc, sc, wc):
         return partial_stats(hyp, z, yc, muc, sc, weights=wc,
-                             latent=latent, psi2_fn=psi2_fn)
+                             latent=latent, psi2_fn=psi2_fn,
+                             reg_stats_fn=reg_stats_fn)
 
     # The carry keeps every leaf at rank >= 1 (scalars as (1,)): rank-0 scan
     # residuals trip shard_map's residual promotion on some JAX versions

@@ -1,0 +1,21 @@
+"""Helpers shared by the kernel packages' ops wrappers (the tiling
+contract's padding + backend selection — see docs/kernels.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to(x, mult, axis, value=0.0):
+    """Pad ``axis`` up to a multiple of ``mult`` with ``value`` (neutral
+    padding — the caller picks the value that contributes zero)."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

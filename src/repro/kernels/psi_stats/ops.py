@@ -4,6 +4,12 @@ Handles padding to tile boundaries (all pads are NEUTRAL — padded latent
 dims carry mu=s=z=0, ell2=1; padded data rows carry w=0; padded inducing
 rows are sliced off the output), backend selection (interpret=True off-TPU),
 and the hyper-parameter plumbing from the core library's log-space dict.
+
+``psi2`` carries a ``custom_vjp`` (``pallas_call`` has no VJP on this JAX
+version): forward is the Pallas kernel, backward recomputes through the
+MXU-matmul XLA reformulation (``gp_kernels.psi2_mxu``) — so the kernel can
+sit inside ``jax.grad`` of the bound (the engine's ``kernel_backend=
+"pallas"`` path).
 """
 from __future__ import annotations
 
@@ -12,27 +18,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core import gp_kernels as gpk
+from .._common import on_tpu as _on_tpu
+from .._common import pad_to as _pad_to
 from . import kernel as _k
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _psi2(block_n, block_m, interpret, hyp, z, mu, s, w):
+    return _psi2_fwd_impl(block_n, block_m, interpret, hyp, z, mu, s, w)
 
 
-def _pad_to(x, mult, axis, value=0.0):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
-def psi2(hyp: dict, z, mu, s, w, block_n: int = 128, block_m: int = 64,
-         interpret: bool | None = None):
-    """Weighted Psi2 = sum_i w_i <K_mi K_im> via the Pallas kernel. (m, m)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+def _psi2_fwd_impl(block_n, block_m, interpret, hyp, z, mu, s, w):
     m = z.shape[0]
     f32 = jnp.float32
     ell2 = jnp.exp(2.0 * hyp["log_ell"]).astype(f32)[None, :]       # (1, q)
@@ -49,6 +46,32 @@ def psi2(hyp: dict, z, mu, s, w, block_n: int = 128, block_m: int = 64,
                          block_n=block_n, block_m=block_m,
                          interpret=interpret)
     return out[:m, :m]
+
+
+def _psi2_vjp_fwd(block_n, block_m, interpret, hyp, z, mu, s, w):
+    out = _psi2_fwd_impl(block_n, block_m, interpret, hyp, z, mu, s, w)
+    return out, (hyp, z, mu, s, w)
+
+
+def _psi2_vjp_bwd(block_n, block_m, interpret, res, ct):
+    del block_n, block_m, interpret
+    # Backward recompute via the XLA MXU reformulation; chunk=256 bounds the
+    # live (chunk, m^2) intermediate under the streaming engine's blocks.
+    out, vjp = jax.vjp(
+        lambda h, zz, mm, ss, ww: gpk.psi2_mxu(h, zz, mm, ss, ww, chunk=256),
+        *res)
+    return vjp(jnp.asarray(ct, out.dtype))
+
+
+_psi2.defvjp(_psi2_vjp_fwd, _psi2_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def psi2(hyp: dict, z, mu, s, w, block_n: int = 128, block_m: int = 64,
+         interpret: bool | None = None):
+    """Weighted Psi2 = sum_i w_i <K_mi K_im> via the Pallas kernel. (m, m)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _psi2(block_n, block_m, interpret, hyp, z, mu, s, w)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))

@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ops import reg_stats, reg_stats_fn_for_engine
+
+__all__ = ["kernel", "ops", "ref", "reg_stats", "reg_stats_fn_for_engine"]

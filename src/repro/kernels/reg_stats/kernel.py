@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for the fused regression map step — the SGPR hot path.
+
+The regression map (`stats.partial_stats`, ``s is None``) needs three
+statistics of the kernel slab ``knm = k(X, Z)``:
+
+    b = Sum_i w_i k_ii          ()        (psi0 sum; sf2 * Sum w for SE)
+    C = knm^T (w . Y)           (m, d)
+    D = (knm . w)^T knm         (m, m)
+
+A mechanical XLA lowering materialises the full (n, m) slab in HBM and
+re-reads it for each contraction — three round trips of O(n m) bytes. This
+kernel evaluates ``knm`` tile-by-tile in VMEM and folds all three statistics
+in the same grid pass, so the slab never exists outside VMEM.
+
+The ARD exponent uses the psi-stats refactoring trick one order lower than
+psi2: with ``inv_q = 1/ell_q^2``,
+
+    E[i, a] = -1/2 Sum_q (x_iq - z_aq)^2 inv_q
+            = alpha_i + M_i. @ Zc.a,
+    alpha_i = -1/2 Sum_q x_iq^2 inv_q
+    M       = [x * inv, -inv/2]           (n, 2q)
+    Zc      = [z; z^2] (per column a)     (2q, m)
+
+so each tile is one MXU matmul + exp, and the contractions are two more MXU
+matmuls ((bm, bn) @ (bn, bm) and (bm, bn) @ (bn, d)).
+
+Grid (a_tiles, b_tiles, n_tiles), n innermost so every output block's
+reduction visits are consecutive (the revolving-accumulator contract):
+  D block (a, b) accumulates over n;
+  C block (a, 0) accumulates only on the b == 0 sweep;
+  b_stat (1, 1)  accumulates only on the a == b == 0 sweep.
+
+Tiling contract (enforced/padded by ops.py):
+  n % block_n == 0, m % block_m == 0, q and d padded to multiples of 8.
+  Padding is NEUTRAL: padded latent dims carry x=z=0, inv_ell2=1 (zero
+  exponent contribution); padded data rows carry w=0 (zero weight kills all
+  three statistics); padded y columns are 0; padded inducing rows are
+  sliced off the outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reg_stats_kernel(inv_ref, sf2_ref, za_ref, zb_ref, x_ref, y_ref, w_ref,
+                      b_ref, c_ref, d_ref):
+    a_i = pl.program_id(0)
+    b_i = pl.program_id(1)
+    k = pl.program_id(2)
+    first_b = b_i == 0
+    first_ab = jnp.logical_and(a_i == 0, first_b)
+
+    @pl.when(jnp.logical_and(first_ab, k == 0))
+    def _init_b():
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when(jnp.logical_and(first_b, k == 0))
+    def _init_c():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    @pl.when(k == 0)
+    def _init_d():
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    inv = inv_ref[0, :]                                       # (q,)
+    sf2 = sf2_ref[0, 0]
+    x = x_ref[...]                                            # (bn, q)
+    w = w_ref[...]                                            # (bn, 1)
+
+    alpha = -0.5 * jnp.sum(x * x * inv[None, :], axis=1)      # (bn,)
+    m_mat = jnp.concatenate(
+        [x * inv[None, :],
+         jnp.broadcast_to(-0.5 * inv[None, :], x.shape)], axis=1)  # (bn, 2q)
+
+    def k_tile(z):                                            # (bm, q) -> (bn, bm)
+        zc = jnp.concatenate([z, z * z], axis=1).T            # (2q, bm)
+        e = alpha[:, None] + jax.lax.dot(
+            m_mat, zc, precision=jax.lax.Precision.HIGHEST)
+        return sf2 * jnp.exp(e)
+
+    ka = k_tile(za_ref[...])
+    kb = k_tile(zb_ref[...])
+
+    d_ref[...] += jax.lax.dot((ka * w).T, kb,
+                              precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(first_b)
+    def _acc_c():
+        c_ref[...] += jax.lax.dot(ka.T, w * y_ref[...],
+                                  precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(first_ab)
+    def _acc_b():
+        b_ref[0, 0] += sf2 * jnp.sum(w)
+
+
+def reg_stats_pallas(inv_ell2, sf2, z, x, y, w, *, block_n=128, block_m=64,
+                     interpret=False):
+    """Fused (b, C, D) regression statistics. All inputs pre-padded (ops.py).
+
+    inv_ell2: (1, q); sf2: (1, 1); z: (m, q); x: (n, q); y: (n, d); w: (n, 1).
+    Returns (b (1, 1), C (m, d), D (m, m)) in the input dtype.
+    """
+    n, q = x.shape
+    m = z.shape[0]
+    d = y.shape[1]
+    assert n % block_n == 0 and m % block_m == 0
+    dt = x.dtype
+    grid = (m // block_m, m // block_m, n // block_n)
+    return pl.pallas_call(
+        _reg_stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q), lambda a, b, k: (0, 0)),            # inv_ell2
+            pl.BlockSpec((1, 1), lambda a, b, k: (0, 0)),            # sf2
+            pl.BlockSpec((block_m, q), lambda a, b, k: (a, 0)),      # z_a
+            pl.BlockSpec((block_m, q), lambda a, b, k: (b, 0)),      # z_b
+            pl.BlockSpec((block_n, q), lambda a, b, k: (k, 0)),      # x
+            pl.BlockSpec((block_n, d), lambda a, b, k: (k, 0)),      # y
+            pl.BlockSpec((block_n, 1), lambda a, b, k: (k, 0)),      # w
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda a, b, k: (0, 0)),            # b
+            pl.BlockSpec((block_m, d), lambda a, b, k: (a, 0)),      # C
+            pl.BlockSpec((block_m, block_m), lambda a, b, k: (a, b)),  # D
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), dt),
+            jax.ShapeDtypeStruct((m, d), dt),
+            jax.ShapeDtypeStruct((m, m), dt),
+        ],
+        interpret=interpret,
+    )(inv_ell2, sf2, z, z, x, y, w)

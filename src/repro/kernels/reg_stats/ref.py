@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused regression-statistics kernel.
+
+Independent of both the Pallas code path and ``repro.core.gp_kernels``;
+states the three statistics directly from the SE-ARD kernel definition.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reg_stats_ref(log_sf2, log_ell, z, x, y, w):
+    """(b (), C (m, d), D (m, m)) of the weighted regression map step."""
+    ell = jnp.exp(log_ell)
+    sf2 = jnp.exp(log_sf2)
+    d = x[:, None, :] / ell - z[None, :, :] / ell
+    knm = sf2 * jnp.exp(-0.5 * jnp.sum(d * d, axis=-1))       # (n, m)
+    b = sf2 * jnp.sum(w)                                      # k_ii = sf2 (SE)
+    c = knm.T @ (w[:, None] * y)
+    d_stat = (knm * w[:, None]).T @ knm
+    return b, c, d_stat

@@ -52,8 +52,9 @@ def make_train_step(cfg: ModelConfig, adam_cfg: adam_mod.AdamConfig | None = Non
 
 def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                        latent: bool = False, failure_mode: str = "drop",
-                       psi2_fn=None, chunk_size: int | None = None,
-                       argnums=(0, 1)):
+                       psi2_fn=None, reg_stats_fn=None,
+                       chunk_size: int | None = None,
+                       kernel_backend: str = "xla", argnums=(0, 1)):
     """Distributed GP map-reduce analogue of ``make_train_step``.
 
     Returns ``(engine, step)`` where ``step`` is the jitted
@@ -62,12 +63,15 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
     each shard's map in fixed-size row blocks so per-device memory is
     O(chunk_size), independent of the shard's row count (see
     ``core.distributed`` for the streaming memory model).
+    ``kernel_backend="pallas"`` routes each block's hot accumulation through
+    the fused Pallas kernels (``kernels.reg_stats`` / ``kernels.psi_stats``).
     """
     from ..core.distributed import DistributedGP
 
     eng = DistributedGP(mesh, data_axes=data_axes, latent=latent,
                         failure_mode=failure_mode, psi2_fn=psi2_fn,
-                        chunk_size=chunk_size)
+                        reg_stats_fn=reg_stats_fn, chunk_size=chunk_size,
+                        kernel_backend=kernel_backend)
     return eng, eng.make_value_and_grad(d, argnums=argnums)
 
 

@@ -1,0 +1,73 @@
+"""Offline markdown link checker for README.md + docs/ (the CI docs job).
+
+Checks every inline markdown link ``[text](target)`` whose target is a
+relative path: the file must exist (anchors are stripped; pure-anchor and
+http(s)/mailto links are skipped — the job must pass without network).
+
+Usage: python tools/check_docs_links.py README.md docs [more files/dirs...]
+Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links (images too — the leading "!" is irrelevant to the target).
+# The target may contain spaces or be <angle-bracketed>; fenced code blocks
+# are stripped before matching.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+_TITLE = re.compile(r'^(.*?)\s+"[^"]*"$')
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check(files: list[Path]) -> list[str]:
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file does not exist")
+            continue
+        text = _FENCE.sub("", f.read_text(encoding="utf-8"))
+        for target in _LINK.findall(text):
+            target = target.strip()
+            if target.startswith("<") and target.endswith(">"):
+                target = target[1:-1]
+            target = _TITLE.sub(r"\1", target)   # drop optional "title"
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            dest = (f.parent / rel).resolve()
+            if not dest.exists():
+                errors.append(f"{f}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    args = sys.argv[1:] or ["README.md", "docs"]
+    files = md_files(args)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
