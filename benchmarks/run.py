@@ -20,6 +20,7 @@ ALL = {
     "lm": figures.lm_train_microbench,
     "stream": streaming.streaming_map,
     "regmap": streaming.reg_map_backends,
+    "svi": streaming.svi_map,
 }
 
 FAST_ARGS = {
@@ -34,6 +35,8 @@ FAST_ARGS = {
     "stream": dict(n_parity=4000, n_big=60_000, m=48, block=1024,
                    budget_gb=0.5, iters=2),
     "regmap": dict(n=4096, m=32, block=1024, iters=2),
+    "svi": dict(n=4096, m=32, block=256, iters=2, batch_sweep=(1, 2, 4, 8),
+                n_mults=(1, 2)),
 }
 
 

@@ -126,6 +126,83 @@ def streaming_map(n_parity=20_000, n_big=200_000, m=64, q=2, d=2,
     return rows
 
 
+def svi_map(n=32_768, m=48, q=2, d=1, block=1024, iters=5,
+            batch_sweep=(1, 2, 4, 8, 16), n_mults=(1, 2, 4)):
+    """Minibatch-stochastic (SVI) map step: per-step cost is O(B), flat in n.
+
+    Two sweeps of the jitted per-step (value, grad) of the stochastic
+    negative bound (``partial_stats_chunked(batch_blocks=B)`` + collapsed
+    bound), against the exact-scan baseline, under both kernel backends
+    (fused reg_stats runs in interpret mode off-TPU):
+
+      * B sweep at fixed n  — step time grows with B (the exact scan is the
+        B = nb endpoint);
+      * n sweep at fixed B  — step time stays flat while the exact scan
+        grows linearly: the memory-wall result of ``--only stream``, now
+        for per-step *compute*.
+
+    The per-step key is an argument of the jitted function (no recompile
+    per step), exactly how ``fit_svi`` / ``make_gp_train_step`` drive it.
+    """
+    rng = np.random.default_rng(11)
+    hyp = default_hyp(q)
+    rows = []
+    fused_fn = reg_stats_fn_for_engine(block_n=128, block_m=32)
+
+    def step_time(n_rows, batch_blocks, reg_stats_fn):
+        x = jnp.asarray(rng.standard_normal((n_rows, q)))
+        y = jnp.asarray(rng.standard_normal((n_rows, d)))
+        z = jnp.asarray(rng.standard_normal((m, q)))
+
+        def neg(hyp_, z_, key):
+            st = partial_stats_chunked(hyp_, z_, y, x, s=None, latent=False,
+                                       reg_stats_fn=reg_stats_fn,
+                                       block_size=block,
+                                       batch_blocks=batch_blocks, key=key)
+            return -collapsed_bound(hyp_, z_, st, d)
+
+        vg = jax.jit(jax.value_and_grad(neg, argnums=(0, 1)))
+        keys = [jax.random.PRNGKey(i) for i in range(iters + 1)]
+        jax.block_until_ready(vg(hyp, z, keys[0]))       # compile
+        ts = []
+        for k in keys[1:]:
+            t0 = time.perf_counter()
+            jax.block_until_ready(vg(hyp, z, k))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    nb = -(-n // block)
+    for backend, fn in (("xla", None), ("pallas", fused_fn)):
+        # -- B sweep at fixed n: per-step time follows B --------------------
+        t_exact = step_time(n, None, fn)
+        print(f"  [{backend}] n={n} (nb={nb} blocks): exact scan "
+              f"{t_exact * 1e3:8.2f} ms/step")
+        rows.append((f"svi/{backend}_exact_n={n}", t_exact * 1e6,
+                     f"nb={nb}"))
+        for B in batch_sweep:
+            if B >= nb:
+                continue
+            t_b = step_time(n, B, fn)
+            rows.append((f"svi/{backend}_B={B}_n={n}", t_b * 1e6,
+                         f"frac_of_exact={t_b / t_exact:.3f}"))
+            print(f"  [{backend}]   B={B:>3}: {t_b * 1e3:8.2f} ms/step "
+                  f"({t_b / t_exact:5.1%} of exact)")
+        # -- n sweep at fixed B: per-step time flat in n --------------------
+        B = batch_sweep[len(batch_sweep) // 2]
+        base = None
+        for mult in n_mults:
+            n_i = n * mult
+            t_b = step_time(n_i, B, fn)
+            t_e = t_exact if mult == 1 else step_time(n_i, None, fn)
+            base = base or t_b
+            rows.append((f"svi/{backend}_B={B}_nsweep_n={n_i}", t_b * 1e6,
+                         f"exact_us={t_e * 1e6:.1f};vs_n1={t_b / base:.2f}"))
+            print(f"  [{backend}]   n={n_i:>8} B={B}: svi "
+                  f"{t_b * 1e3:8.2f} ms/step (x{t_b / base:4.2f} of n={n})  "
+                  f"exact {t_e * 1e3:8.2f} ms/step")
+    return rows
+
+
 def reg_map_backends(n=20_000, m=64, q=3, d=2, block=2048, iters=3):
     """Regression map step, XLA vs fused-Pallas backend: wall-clock time and
     compiled peak temp bytes per backend, plus bound parity.

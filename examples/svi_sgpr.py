@@ -1,0 +1,46 @@
+"""Minibatch-stochastic (SVI) sparse GP regression on the streaming engine.
+
+The exact bound scans every row block per optimiser step (O(n) per step);
+the SVI mode visits ``batch_blocks`` random blocks and reweights, so a step
+costs O(batch_blocks * chunk_size) no matter how large n grows — Hensman
+et al.'s "GPs for Big Data" estimator on this repo's block machinery.  See
+docs/training.md for the derivation and tuning guidance.
+
+  PYTHONPATH=src python examples/svi_sgpr.py
+"""
+import numpy as np
+
+from repro.core import SGPR
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 4000
+    x = rng.uniform(-3, 3, size=(n, 1))
+    f = np.sin(2.0 * x) + 0.3 * np.cos(5.0 * x)
+    y = f + 0.1 * rng.standard_normal((n, 1))
+
+    # 32 blocks of 128 rows; each SVI step touches 4 of them (512 rows),
+    # an 8x cheaper step than the exact scan.
+    model = SGPR(x, y, num_inducing=30, seed=0,
+                 chunk_size=128, batch_blocks=4)
+    print(f"n={n}, blocks of {model.chunk_size} rows, "
+          f"{model.batch_blocks} blocks/step")
+    print(f"initial exact bound: {model.log_bound():10.2f}")
+
+    res = model.fit_svi(steps=300, lr=2e-2, seed=0, verbose=True)
+    print(f"final exact bound:   {model.log_bound():10.2f}  "
+          f"({res.n_steps} Adam steps, each scanning "
+          f"{model.batch_blocks}/{-(-n // model.chunk_size)} blocks)")
+
+    xs = np.linspace(-3, 3, 200)[:, None]
+    mean, var = model.predict(xs, include_noise=False)
+    true = np.sin(2.0 * xs) + 0.3 * np.cos(5.0 * xs)
+    rmse = float(np.sqrt(np.mean((mean - true) ** 2)))
+    sigma = float(1.0 / np.sqrt(np.exp(model.params["hyp"]["log_beta"])))
+    print(f"test RMSE vs noiseless truth: {rmse:.4f} "
+          f"(noise sd used to generate: 0.100, learned: {sigma:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,16 @@ reduce stays constant-size — exactly the paper's cost model, now with a
 bounded map footprint).  ``put_data`` pads n up to a multiple of
 ``n_shards * chunk_size`` so every scan step is shape-static; padded rows
 carry zero weight and contribute nothing.
+
+Minibatch-stochastic bound (``batch_blocks``, Hensman-style SVI): the same
+factorisation that lets blocks stream also lets them be *subsampled* —
+each shard visits ``batch_blocks`` random blocks per step and scales its
+partial Stats by ``n_local_blocks / batch_blocks``, making per-step map
+*compute* (not just memory) O(batch_blocks * chunk_size), independent of
+n.  Shards sample independently (the step key is folded with the shard
+index), the psum is unchanged, and the reweighted reduced Stats are
+unbiased estimates of the exact ones.  See docs/training.md for the
+derivation, which bound terms inherit exact unbiasedness, and tuning.
 """
 from __future__ import annotations
 
@@ -91,13 +101,23 @@ def num_shards(mesh: Mesh, axis_names: Sequence[str]) -> int:
 def pad_and_shard(arrs: dict, n_shards: int, block: int | None = None):
     """Pad leading dim to a multiple of n_shards; return arrays + weight vec.
 
-    With ``block`` set (the streaming path's chunk size), pads to a multiple
-    of ``n_shards * block`` instead, so each shard holds a whole number of
-    blocks and every ``lax.scan`` step in the chunked map is shape-static.
+    Args:
+      arrs: dict of host arrays, each (n, ...) with a shared leading dim —
+        e.g. ``{"y": (n, d), "mu": (n, q), "s": (n, q)}``.  Keys named
+        ``"s"``/``"S"`` (q(X) variances) are padded with 1s (log-safe);
+        everything else with 0s.
+      n_shards: number of data shards the mesh provides; the padded n is the
+        next multiple of ``n_shards`` (times ``block`` if set).
+      block: the streaming chunk size (``chunk_size`` on the engines), or
+        None.  When set, pads to a multiple of ``n_shards * block`` instead,
+        so each shard holds a whole number of blocks and every ``lax.scan``
+        step in the chunked map — and every SVI block sample — is
+        shape-static.
 
-    The weight vector is 1 on real rows, 0 on padding — padding therefore
-    contributes nothing to any statistic (see ``stats.partial_stats``).
-    Runs on host (numpy in, numpy out) before device_put.
+    Returns ``(padded dict, weights)`` where ``weights`` is (n_padded,) —
+    1.0 on real rows, 0.0 on padding — so padding contributes nothing to any
+    statistic (see ``stats.partial_stats``).  Runs on host (numpy in, numpy
+    out) before device_put.
     """
     import numpy as np
 
@@ -127,19 +147,41 @@ class DistributedGP:
         reg_stats_fn=None,
         chunk_size: int | None = None,
         kernel_backend: str = "xla",
+        batch_blocks: int | None = None,
     ):
         """``chunk_size``: if set, each shard's map streams its rows in
         blocks of this many points (see the module docstring's streaming
-        memory model); ``None`` keeps the monolithic all-rows-at-once map.
+        memory model); ``None`` (default) keeps the monolithic
+        all-rows-at-once map.
 
         ``kernel_backend``: "xla" (default) keeps the monolithic jnp map;
         "pallas" routes the map's hot accumulation through the fused Pallas
         kernels — ``kernels.reg_stats`` on the regression path and
         ``kernels.psi_stats`` on the latent path — so the per-block kernel
         slab stays in VMEM.  Explicit ``psi2_fn``/``reg_stats_fn`` hooks
-        override the backend's choice."""
+        override the backend's choice.
+
+        ``batch_blocks``: if set (requires ``chunk_size``), switches the map
+        to the minibatch-stochastic (SVI) bound: *each shard* samples
+        ``batch_blocks`` of its local row blocks per step — with its own
+        fold of the step key, so shards sample independently — and scales
+        its partial Stats by ``n_local_blocks / batch_blocks`` before the
+        psum.  Per-step map cost becomes O(batch_blocks * chunk_size) per
+        shard, independent of the shard's row count; the reduce is unchanged
+        (one O(m²+md) psum).  The programs returned by :meth:`bound_fn` and
+        :meth:`make_value_and_grad` then take one extra trailing argument: a
+        ``jax.random.PRNGKey`` (uint32 (2,)), fresh per step.  Default None
+        = exact bound (every block scanned every step)."""
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if batch_blocks is not None:
+            if chunk_size is None:
+                raise ValueError(
+                    "batch_blocks (SVI mode) requires chunk_size: the "
+                    "minibatch is a subset of the streaming row blocks")
+            if batch_blocks < 1:
+                raise ValueError(
+                    f"batch_blocks must be >= 1, got {batch_blocks}")
         if kernel_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
@@ -156,6 +198,7 @@ class DistributedGP:
         self.reg_stats_fn = reg_stats_fn
         self.kernel_backend = kernel_backend
         self.chunk_size = chunk_size
+        self.batch_blocks = batch_blocks
         self.n_shards = num_shards(mesh, self.data_axes)
         self._data_spec = P(self.data_axes)
         self._rep_spec = P()
@@ -176,26 +219,46 @@ class DistributedGP:
         return out, wdev
 
     # -- the SPMD program ---------------------------------------------------
-    def _local_stats(self, hyp, z, y, mu, s, w) -> Stats:
-        """Shard-local map: monolithic (chunk_size=None) or streamed."""
+    def _local_stats(self, hyp, z, y, mu, s, w, key=None, exact=False) -> Stats:
+        """Shard-local map: monolithic (chunk_size=None), streamed, or —
+        with ``batch_blocks`` set and a per-shard ``key`` — SVI-sampled.
+        ``exact=True`` forces the full scan regardless of ``batch_blocks``
+        (the posterior/prediction path)."""
         return partial_stats_chunked(
             hyp, z, y, mu, s,
             weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
             reg_stats_fn=self.reg_stats_fn, block_size=self.chunk_size,
+            batch_blocks=None if exact else self.batch_blocks, key=key,
         )
 
-    def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d):
+    def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d, key=None):
         """Runs per-shard under shard_map. Returns the (replicated) bound."""
         idx = _flat_shard_index(self.mesh, self.data_axes)
         alive = fmask[idx]
         w = w * alive
 
-        st = self._local_stats(hyp, z, y, mu, s, w)
+        if key is not None:
+            # Per-shard sampling: every shard folds its flat index into the
+            # (replicated) step key, so shards draw independent block
+            # subsets.  Independence keeps the summed estimator unbiased:
+            # E[psum of per-shard reweighted Stats] = psum of exact Stats.
+            key = jax.random.fold_in(key, idx)
+        st = self._local_stats(hyp, z, y, mu, s, w, key=key)
         # --- the reduce: constant-size collective, independent of n --------
         st = Stats(*(lax.psum(t, self.data_axes) for t in st))
 
         if self.failure_mode == "rescale":
-            live_frac = st.n / n_full
+            if key is None:
+                n_live = st.n
+            else:
+                # SVI: st.n is a stochastic reweighted count — dividing by
+                # it would make a biased ratio estimator that conflates
+                # sampling noise with node failure.  Rescale by the
+                # deterministic pre-sampling live count instead (one cheap
+                # extra scalar psum), which preserves unbiasedness: a
+                # constant per-step multiplier commutes with E[.].
+                n_live = lax.psum(jnp.sum(w), self.data_axes)
+            live_frac = n_live / n_full
             st = Stats(
                 A=st.A / live_frac, B=st.B / live_frac, C=st.C / live_frac,
                 D=st.D / live_frac, KL=st.KL / live_frac, n=n_full,
@@ -205,23 +268,32 @@ class DistributedGP:
         return collapsed_bound(hyp, z, st, d)
 
     def bound_fn(self, d: int):
-        """Replicated-output distributed bound: (hyp, z, y, mu, s, w, fmask, n)->()."""
-        f = shard_map(
-            functools.partial(self._shard_bound, d=d),
-            mesh=self.mesh,
-            in_specs=(
-                self._rep_spec,   # hyp (pytree of scalars/vectors)
-                self._rep_spec,   # z
-                self._data_spec,  # y
-                self._data_spec,  # mu
-                self._data_spec,  # s (None for regression: empty pytree)
-                self._data_spec,  # w
-                self._rep_spec,   # fmask
-                self._rep_spec,   # n_full
-            ),
-            out_specs=self._rep_spec,
-        )
-        return f
+        """Replicated-output distributed bound.
+
+        Signature: ``(hyp, z, y, mu, s, w, fmask, n_full) -> ()`` — plus a
+        trailing per-step ``key`` when the engine was built with
+        ``batch_blocks`` (SVI mode).
+        """
+        specs = [
+            self._rep_spec,   # hyp (pytree of scalars/vectors)
+            self._rep_spec,   # z
+            self._data_spec,  # y
+            self._data_spec,  # mu
+            self._data_spec,  # s (None for regression: empty pytree)
+            self._data_spec,  # w
+            self._rep_spec,   # fmask
+            self._rep_spec,   # n_full
+        ]
+        if self.batch_blocks is not None:
+            specs.append(self._rep_spec)  # step key (folded per shard inside)
+
+            def body(hyp, z, y, mu, s, w, fmask, n_full, key):
+                return self._shard_bound(hyp, z, y, mu, s, w, fmask, n_full,
+                                         d=d, key=key)
+        else:
+            body = functools.partial(self._shard_bound, d=d)
+        return shard_map(body, mesh=self.mesh, in_specs=tuple(specs),
+                         out_specs=self._rep_spec)
 
     def make_value_and_grad(self, d: int, argnums=(0, 1)):
         """Jitted (value, grad) of the NEGATIVE bound wrt chosen args.
@@ -229,8 +301,19 @@ class DistributedGP:
         argnums indexes (hyp, z, mu, s): for SGPR use (0, 1); for GPLVM add
         mu and s — their gradients stay sharded with the data (the paper's
         local-parameter optimisation, no extra communication).
+
+        The returned step is ``step(hyp, z, mu, s, y, w, fmask, n_full)``;
+        in SVI mode (``batch_blocks`` set) it takes one extra trailing
+        argument, a fresh ``jax.random.PRNGKey`` per step, and returns an
+        unbiased stochastic estimate instead of the exact value/grad.
         """
         bound = self.bound_fn(d)
+
+        if self.batch_blocks is not None:
+            def neg_svi(hyp, z, mu, s, y, w, fmask, n_full, key):
+                return -bound(hyp, z, y, mu, s, w, fmask, n_full, key)
+
+            return jax.jit(jax.value_and_grad(neg_svi, argnums=argnums))
 
         def neg(hyp, z, mu, s, y, w, fmask, n_full):
             return -bound(hyp, z, y, mu, s, w, fmask, n_full)
@@ -238,12 +321,14 @@ class DistributedGP:
         return jax.jit(jax.value_and_grad(neg, argnums=argnums))
 
     def reduced_stats(self, d: int):
-        """Jitted program returning the globally-reduced Stats (for q(u)/predict)."""
+        """Jitted program returning the globally-reduced Stats (for
+        q(u)/predict).  Always the exact scan — posterior/prediction should
+        see every point even when training ran in SVI mode."""
 
         def _stats(hyp, z, y, mu, s, w, fmask):
             idx = _flat_shard_index(self.mesh, self.data_axes)
             w = w * fmask[idx]
-            st = self._local_stats(hyp, z, y, mu, s, w)
+            st = self._local_stats(hyp, z, y, mu, s, w, exact=True)
             return Stats(*(lax.psum(t, self.data_axes) for t in st))
 
         f = shard_map(

@@ -31,16 +31,27 @@ class BayesianGPLVM:
     """``chunk_size``: if set, the map step streams rows in blocks of this
     many points (``stats.partial_stats_chunked``), bounding peak memory at
     O(chunk_size * m^2) instead of the monolithic O(n * m^2) psi2 tensor —
-    the GPLVM path's dominant allocation. Same bound to float precision."""
+    the GPLVM path's dominant allocation. Same bound to float precision.
+
+    ``batch_blocks``: default minibatch size (in blocks) for
+    :meth:`fit_svi` — per-step cost O(batch_blocks * chunk_size * m²)
+    instead of the exact scan's O(n * m²).  Note the per-point KL(q(X_i))
+    stat is reweighted along with the data terms (it is a sum over points;
+    see docs/training.md), and a step's gradients touch only the sampled
+    blocks' (mu, log_s) — unsampled rows see zero gradient but still drift
+    briefly under Adam's geometrically-decaying first moment until their
+    block is sampled again."""
 
     def __init__(self, y: np.ndarray, q: int, num_inducing: int = 50,
                  jitter: float = 1e-6, seed: int = 0, s0: float = 0.5,
-                 chunk_size: int | None = None):
+                 chunk_size: int | None = None,
+                 batch_blocks: int | None = None):
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.d = y.shape
         self.q = q
         self.jitter = jitter
         self.chunk_size = chunk_size
+        self.batch_blocks = batch_blocks
         mu0 = init_utils.pca(np.asarray(y), q)
         z0 = init_utils.kmeans(mu0, num_inducing, seed=seed)
         hyp0 = init_utils.default_hyp(np.asarray(y), q)
@@ -65,9 +76,10 @@ class BayesianGPLVM:
         self._neg_vg_local = jax.jit(jax.value_and_grad(
             lambda l, g, y_: neg_bound({**g, **l}, y_)))
 
-    def _map_stats(self, hyp, z, y, mu, s):
+    def _map_stats(self, hyp, z, y, mu, s, batch_blocks=None, key=None):
         return partial_stats_chunked(hyp, z, y, mu, s=s, latent=True,
-                                     block_size=self.chunk_size)
+                                     block_size=self.chunk_size,
+                                     batch_blocks=batch_blocks, key=key)
 
     def log_bound(self, params=None) -> float:
         params = self.params if params is None else params
@@ -94,6 +106,43 @@ class BayesianGPLVM:
         self.params = jax.tree.map(jnp.asarray, unravel(jnp.asarray(res.x)))
         if verbose:
             print(f"GPLVM fit(joint): bound={-res.f:.4f} iters={res.n_iters}")
+        return res
+
+    def fit_svi(self, steps: int = 500, lr: float = 1e-2,
+                batch_blocks: int | None = None, seed: int = 0,
+                verbose: bool = False):
+        """Minibatch-stochastic training of ALL parameters (hyp, Z, mu, S).
+
+        Same estimator as ``SGPR.fit_svi`` (sample ``batch_blocks`` row
+        blocks, reweight Stats by ``n_blocks / batch_blocks``), with the
+        GPLVM's per-point KL reweighted alongside the data-fit stats.  A
+        step only receives gradients for the sampled blocks' local
+        (mu, log_s) rows; unsampled rows coast on Adam's decaying momentum
+        until their block is next sampled — over many steps every block is
+        visited.  Returns a ``train.svi.SVIResult``; requires
+        ``chunk_size``.
+        """
+        from ..train.svi import svi_fit
+
+        bb = self.batch_blocks if batch_blocks is None else batch_blocks
+        if self.chunk_size is None or bb is None:
+            raise ValueError(
+                "fit_svi needs chunk_size and batch_blocks — e.g. "
+                "BayesianGPLVM(..., chunk_size=1024, batch_blocks=4)")
+
+        def neg(params, key):
+            st = self._map_stats(params["hyp"], params["z"], self.y,
+                                 params["mu"], jnp.exp(params["log_s"]),
+                                 batch_blocks=bb, key=key)
+            return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
+                                              self.d, jitter=self.jitter)
+
+        res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
+                      jax.random.PRNGKey(seed), steps=steps, lr=lr)
+        self.params = res.params
+        if verbose:
+            print(f"GPLVM fit_svi: est. bound={-res.history[-1]:.4f} "
+                  f"steps={res.n_steps} (B={bb} blocks/step)")
         return res
 
     def _fit_alternating(self, max_iters, outer_rounds, verbose):

@@ -31,19 +31,26 @@ class SGPR:
     ``kernel_backend``: "xla" (default) or "pallas" — the latter fuses the
     map's kernel-slab evaluation and both contractions into one Pallas pass
     (``kernels.reg_stats``), so the (n, m) slab never round-trips HBM.
+
+    ``batch_blocks``: default minibatch size (in blocks of ``chunk_size``
+    rows) for :meth:`fit_svi` — the stochastic trainer whose per-step cost
+    is O(batch_blocks * chunk_size), independent of n.  ``fit`` /
+    ``log_bound`` / ``predict`` always use the exact scan.
     """
 
     def __init__(self, x: np.ndarray, y: np.ndarray, num_inducing: int = 50,
                  hyp: dict | None = None, z: np.ndarray | None = None,
                  jitter: float = 1e-6, seed: int = 0,
                  chunk_size: int | None = None,
-                 kernel_backend: str = "xla"):
+                 kernel_backend: str = "xla",
+                 batch_blocks: int | None = None):
         self.x = jnp.asarray(x, jnp.float64)
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.q = x.shape
         self.d = y.shape[1]
         self.jitter = jitter
         self.chunk_size = chunk_size
+        self.batch_blocks = batch_blocks
         if kernel_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
@@ -68,10 +75,11 @@ class SGPR:
 
         self._neg_vg = jax.jit(jax.value_and_grad(neg_bound))
 
-    def _map_stats(self, hyp, z, y, x):
+    def _map_stats(self, hyp, z, y, x, batch_blocks=None, key=None):
         return partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
                                      reg_stats_fn=self._reg_stats_fn,
-                                     block_size=self.chunk_size)
+                                     block_size=self.chunk_size,
+                                     batch_blocks=batch_blocks, key=key)
 
     # -- objective ----------------------------------------------------------
     def log_bound(self, params=None) -> float:
@@ -94,6 +102,46 @@ class SGPR:
         if verbose:
             print(f"SGPR fit: bound={-res.f:.4f} iters={res.n_iters} "
                   f"evals={res.n_evals} converged={res.converged}")
+        return res
+
+    def fit_svi(self, steps: int = 500, lr: float = 1e-2,
+                batch_blocks: int | None = None, seed: int = 0,
+                verbose: bool = False):
+        """Minibatch-stochastic training (Hensman-style SVI, Adam).
+
+        Each step samples ``batch_blocks`` of the ``ceil(n / chunk_size)``
+        row blocks, reweights their Stats by ``n_blocks / batch_blocks``
+        (an unbiased estimate of the exact streamed Stats — see
+        docs/training.md), and takes one Adam step on the stochastic
+        negative bound.  Per-step cost is O(batch_blocks * chunk_size * m),
+        independent of n; ``fit`` (exact SCG) remains the right choice when
+        a full scan per iteration is affordable.
+
+        Requires ``chunk_size``; ``batch_blocks`` falls back to the value
+        given at construction.  Returns a ``train.svi.SVIResult``.
+        """
+        from ..train.svi import svi_fit
+
+        bb = self.batch_blocks if batch_blocks is None else batch_blocks
+        if self.chunk_size is None or bb is None:
+            raise ValueError(
+                "fit_svi needs chunk_size (the block size) and batch_blocks "
+                "(blocks per step) — e.g. SGPR(..., chunk_size=1024, "
+                "batch_blocks=4)")
+
+        def neg(params, key):
+            st = self._map_stats(params["hyp"], params["z"], self.y, self.x,
+                                 batch_blocks=bb, key=key)
+            return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
+                                              self.d, jitter=self.jitter)
+
+        res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
+                      jax.random.PRNGKey(seed), steps=steps, lr=lr)
+        self.params = res.params
+        self._stats_cache = None
+        if verbose:
+            print(f"SGPR fit_svi: est. bound={-res.history[-1]:.4f} "
+                  f"steps={res.n_steps} (B={bb} blocks/step)")
         return res
 
     # -- posterior ----------------------------------------------------------

@@ -119,6 +119,19 @@ def zero_stats(m: int, d: int, dtype=jnp.float64) -> Stats:
                  D=jnp.zeros((m, m), dtype), KL=zf, n=zf)
 
 
+def sample_block_indices(key: Array, n_blocks: int, batch_blocks: int) -> Array:
+    """Uniform size-``batch_blocks`` subset of ``range(n_blocks)``, without
+    replacement — the SVI block sampler.
+
+    Sampling without replacement keeps the subset-mean identity exact:
+    E[sum over sampled blocks] = (batch_blocks / n_blocks) * (sum over all
+    blocks), which is what makes the ``n_blocks / batch_blocks`` reweighting
+    in :func:`partial_stats_chunked` an unbiased estimator of the exact
+    streamed statistics.  Returns ``(batch_blocks,)`` integer indices.
+    """
+    return jax.random.permutation(key, n_blocks)[:batch_blocks]
+
+
 def partial_stats_chunked(
     hyp: dict,
     z: Array,
@@ -130,29 +143,72 @@ def partial_stats_chunked(
     psi2_fn=None,
     reg_stats_fn=None,
     block_size: int | None = 1024,
+    batch_blocks: int | None = None,
+    key: Array | None = None,
+    block_indices: Array | None = None,
 ) -> Stats:
     """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
 
-    ``block_size=None`` delegates to the monolithic :func:`partial_stats`
-    (so callers can dispatch on a single optional chunk-size setting).
+    Exact mode (default) scans *every* block; minibatch (SVI) mode scans a
+    random size-``batch_blocks`` subset and reweights, making the per-call
+    cost O(batch_blocks * block_size) — independent of ``n_k``.
 
-    Mathematically identical to :func:`partial_stats` (every statistic is a
-    plain sum over points), but ``lax.scan``s over ``ceil(n_k / block_size)``
-    blocks of ``block_size`` rows, folding each block's Stats into a
-    constant-size carry.  Peak live memory is therefore
+    Args:
+      hyp: kernel/noise hyper-parameters (log-space dict).
+      z: (m, q) inducing inputs.
+      y: (n_k, d) outputs on this shard.
+      mu: (n_k, q) q(X) means (== the inputs X for regression).
+      s: (n_k, q) q(X) variances, or None for regression.
+      weights: (n_k,) 0/1 row mask (padding / failed points). None = ones.
+      latent: include the per-point KL term (GPLVM) or not (regression).
+      psi2_fn / reg_stats_fn: per-block accumulation hooks (e.g. the Pallas
+        kernels); invoked once per scanned block on block-sized operands.
+      block_size: rows per scan block (default 1024). ``None`` delegates to
+        the monolithic :func:`partial_stats` — so callers can dispatch on a
+        single optional chunk-size setting.
+      batch_blocks: if set, enables the stochastic (SVI) map: only
+        ``batch_blocks`` of the ``nb = ceil(n_k / block_size)`` blocks are
+        visited, chosen uniformly without replacement, and the accumulated
+        Stats are scaled by ``nb / batch_blocks``.  Because every field of
+        ``Stats`` is a plain sum over points (including the per-point KL and
+        the effective count ``n``), the scaled Stats — and any function that
+        is linear in them — are *unbiased* estimates of the exact streamed
+        values; see docs/training.md for the derivation and for which bound
+        terms inherit exact unbiasedness.  ``batch_blocks >= nb`` degrades
+        gracefully to the exact scan (scale 1).  Requires ``block_size``.
+      key: PRNG key for the block sampler (required in SVI mode unless
+        ``block_indices`` is given). Pass a fresh key per optimiser step.
+      block_indices: explicit (batch_blocks,) block indices, overriding the
+        sampler — deterministic replay / subset-enumeration tests / custom
+        block samplers plug in here.
+
+    Exact mode is mathematically identical to :func:`partial_stats` (every
+    statistic is a plain sum over points), but ``lax.scan``s over
+    ``ceil(n_k / block_size)`` blocks of ``block_size`` rows, folding each
+    block's Stats into a constant-size carry.  Peak live memory is therefore
     O(block_size * (m + q + d)) + O(m^2) — *independent of n_k* — instead of
     the monolithic path's O(n_k m^2) (the GPLVM psi2 broadcast) or
     O(n_k m) (regression).  This is what lets a shard stream more rows than
     fit in its device buffer (paper §5: the 2M-record flight experiment).
 
     Rows are padded up to a multiple of ``block_size`` with zero weight, so
-    every scan step has identical shapes and padding contributes nothing.
-    ``psi2_fn`` / ``reg_stats_fn`` (e.g. the Pallas kernels) are invoked once
-    per block on block-sized operands.
+    every scan step has identical shapes and padding contributes nothing —
+    in SVI mode a sampled padding-heavy final block is handled by the same
+    mechanism (its rows carry zero weight; the reweighting stays unbiased
+    because the scale is uniform across blocks).
     """
     n_k = y.shape[0]
+    if batch_blocks is not None:
+        if block_size is None:
+            raise ValueError(
+                "batch_blocks (SVI mode) requires block_size: the minibatch "
+                "is a subset of the streaming row blocks")
+        if batch_blocks < 1:
+            raise ValueError(f"batch_blocks must be >= 1, got {batch_blocks}")
     if block_size is None or n_k <= block_size:
         # Single block (or streaming disabled) — no scan machinery needed.
+        # With batch_blocks set this is the nb == 1 degenerate case: the
+        # "subset" is the whole data, i.e. the exact statistics.
         return partial_stats(hyp, z, y, mu, s, weights=weights,
                              latent=latent, psi2_fn=psi2_fn,
                              reg_stats_fn=reg_stats_fn)
@@ -170,6 +226,28 @@ def partial_stats_chunked(
     # q(X) variances padded with 1s: log-safe, and masked out by w=0 anyway.
     s_b = None if s is None else blocks(s, cval=1.0)
 
+    xs = (y_b, mu_b, w_b) if s is None else (y_b, mu_b, s_b, w_b)
+
+    # -- SVI: gather the sampled blocks, scan only those, reweight ----------
+    # Explicit block_indices are always honored (deterministic replay or a
+    # custom sampler, possibly with replacement), even at batch_blocks >= nb
+    # where the key-driven sampler would degrade to the exact scan.
+    scale = 1.0
+    if batch_blocks is not None and (batch_blocks < nb
+                                     or block_indices is not None):
+        if block_indices is None:
+            if key is None:
+                raise ValueError(
+                    "SVI mode needs a PRNG key (or explicit block_indices)")
+            block_indices = sample_block_indices(key, nb, batch_blocks)
+        idx = jnp.asarray(block_indices)
+        if idx.shape != (batch_blocks,):
+            raise ValueError(
+                f"block_indices must have shape ({batch_blocks},), "
+                f"got {idx.shape}")
+        xs = tuple(jnp.take(a, idx, axis=0) for a in xs)
+        scale = nb / batch_blocks
+
     def block_stats(yc, muc, sc, wc):
         return partial_stats(hyp, z, yc, muc, sc, weights=wc,
                              latent=latent, psi2_fn=psi2_fn,
@@ -179,23 +257,28 @@ def partial_stats_chunked(
     # residuals trip shard_map's residual promotion on some JAX versions
     # when the chunked map runs (and is differentiated) inside the
     # distributed engine.
-    def body(carry, xs):
+    def body(carry, xs_t):
         if s is None:
-            yc, muc, wc = xs
+            yc, muc, wc = xs_t
             st = block_stats(yc, muc, None, wc)
         else:
-            yc, muc, sc, wc = xs
+            yc, muc, sc, wc = xs_t
             st = block_stats(yc, muc, sc, wc)
         return Stats(*(c + jnp.atleast_1d(t) for c, t in zip(carry, st))), None
 
-    xs = (y_b, mu_b, w_b) if s is None else (y_b, mu_b, s_b, w_b)
     # Carry init matches one block's output dtypes exactly (abstract eval —
     # works for any psi2_fn backend, including the Pallas kernel).
     shapes = jax.eval_shape(
         block_stats, y_b[0], mu_b[0], None if s is None else s_b[0], w_b[0])
     init = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
     out, _ = jax.lax.scan(body, init, xs)
-    return Stats(*(t.reshape(sh.shape) for t, sh in zip(out, shapes)))
+    out = Stats(*(t.reshape(sh.shape) for t, sh in zip(out, shapes)))
+    # Every Stats field is a per-point sum, so one uniform scale makes the
+    # whole tuple (A, B, C, D, KL, n) unbiased for the exact scan. The
+    # bound's global regulariser structure (log-det / quadratic in Kmm) is
+    # a *function of* these stats, not itself a per-point sum — it is never
+    # scaled here (docs/training.md, "which terms scale").
+    return out.scale(scale) if scale != 1.0 else out
 
 
 def reduce_stats(parts: list[Stats]) -> Stats:

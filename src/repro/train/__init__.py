@@ -1,1 +1,1 @@
-from . import steps
+from . import steps, svi

@@ -54,24 +54,39 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                        latent: bool = False, failure_mode: str = "drop",
                        psi2_fn=None, reg_stats_fn=None,
                        chunk_size: int | None = None,
-                       kernel_backend: str = "xla", argnums=(0, 1)):
+                       kernel_backend: str = "xla",
+                       batch_blocks: int | None = None, argnums=(0, 1)):
     """Distributed GP map-reduce analogue of ``make_train_step``.
 
     Returns ``(engine, step)`` where ``step`` is the jitted
     (value, grad) of the negative collapsed bound —
-    ``step(hyp, z, mu, s, y, w, fmask, n_full)``.  ``chunk_size`` streams
-    each shard's map in fixed-size row blocks so per-device memory is
-    O(chunk_size), independent of the shard's row count (see
-    ``core.distributed`` for the streaming memory model).
-    ``kernel_backend="pallas"`` routes each block's hot accumulation through
-    the fused Pallas kernels (``kernels.reg_stats`` / ``kernels.psi_stats``).
+    ``step(hyp, z, mu, s, y, w, fmask, n_full)`` with shapes
+    ``hyp`` (log-space dict), ``z`` (m, q), ``mu`` (n_pad, q), ``s``
+    (n_pad, q) or None, ``y`` (n_pad, d), ``w`` (n_pad,), ``fmask``
+    (n_shards,), ``n_full`` scalar.
+
+    ``chunk_size`` (default None = monolithic) streams each shard's map in
+    fixed-size row blocks so per-device memory is O(chunk_size),
+    independent of the shard's row count (see ``core.distributed`` for the
+    streaming memory model).  ``kernel_backend="pallas"`` ("xla" default)
+    routes each block's hot accumulation through the fused Pallas kernels
+    (``kernels.reg_stats`` / ``kernels.psi_stats``).
+
+    ``batch_blocks`` (default None = exact bound; requires ``chunk_size``)
+    switches to the minibatch-stochastic (SVI) bound: each shard samples
+    that many of its row blocks per step and reweights, so per-step compute
+    is O(batch_blocks * chunk_size) per shard, flat in n.  The step then
+    takes one extra trailing argument — a fresh ``jax.random.PRNGKey``:
+    ``step(hyp, z, mu, s, y, w, fmask, n_full, key)`` — and returns an
+    unbiased stochastic estimate (see docs/training.md).
     """
     from ..core.distributed import DistributedGP
 
     eng = DistributedGP(mesh, data_axes=data_axes, latent=latent,
                         failure_mode=failure_mode, psi2_fn=psi2_fn,
                         reg_stats_fn=reg_stats_fn, chunk_size=chunk_size,
-                        kernel_backend=kernel_backend)
+                        kernel_backend=kernel_backend,
+                        batch_blocks=batch_blocks)
     return eng, eng.make_value_and_grad(d, argnums=argnums)
 
 

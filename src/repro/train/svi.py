@@ -1,0 +1,102 @@
+"""Stochastic (SVI) optimisation loop for the minibatch-reweighted bound.
+
+A deliberately tiny Adam-on-a-pytree driver shared by ``SGPR.fit_svi``,
+``BayesianGPLVM.fit_svi``, the SVI example, and the ``--only svi``
+benchmark.  It is *not* the LM substrate's AdamW (``optim/adam.py``): GP
+hyper-parameters live in float64 and must stay there (the collapsed bound's
+Cholesky factors are f64), so the moments here are kept in each leaf's own
+dtype and nothing round-trips through f32.  No weight decay either — decay
+on log-hyper-parameters or inducing inputs would silently bias the model.
+
+The objective contract matches what the engines hand out: a jitted
+``neg_vg(params, key) -> (value, grads)`` where ``value`` is an *unbiased
+stochastic estimate* of the negative bound (see ``stats.
+partial_stats_chunked(batch_blocks=...)``).  One fresh fold of the run key
+is consumed per step — the caller never touches key plumbing.
+
+SCG (the exact-bound optimiser used by ``fit``) is unusable here: its line
+searches compare function values across calls, which a resampled minibatch
+objective breaks.  Plain first-order steps with a constant rate are the
+standard SVI recipe (Hensman et al., arXiv:1309.6835).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SVIResult(NamedTuple):
+    params: dict        # optimised parameter pytree
+    history: list       # per-step stochastic estimates of the NEGATIVE bound
+    n_steps: int
+
+
+def adam_init(params):
+    """Zero first/second moments, matching each leaf's shape *and dtype*."""
+    zeros = lambda p: jnp.zeros(jnp.shape(p), jnp.result_type(p))
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, opt, lr: float, b1: float = 0.9,
+              b2: float = 0.999, eps: float = 1e-8):
+    """One dtype-preserving Adam update. Returns (new_params, new_opt)."""
+    t = opt["step"] + 1
+    tf = t.astype(jnp.float64)
+    b1c = 1.0 - b1 ** tf
+    b2c = 1.0 - b2 ** tf
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        # The bias corrections are f64 scalars; cast the delta back so an
+        # f32 leaf stays f32 (the dtype-preserving contract above).
+        delta = (lr * (m2 / b1c) / (jnp.sqrt(v2 / b2c) + eps)).astype(p.dtype)
+        return p - delta, m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    return (tdef.unflatten([o[0] for o in out]),
+            {"m": tdef.unflatten([o[1] for o in out]),
+             "v": tdef.unflatten([o[2] for o in out]),
+             "step": t})
+
+
+def svi_fit(
+    neg_vg: Callable,
+    params: dict,
+    key: Array,
+    steps: int = 200,
+    lr: float = 1e-2,
+    callback: Callable | None = None,
+) -> SVIResult:
+    """Run ``steps`` Adam updates on a stochastic objective.
+
+    Args:
+      neg_vg: ``(params, key) -> (neg_bound_estimate, grads)`` — typically
+        ``jax.jit(jax.value_and_grad(...))`` over a ``batch_blocks`` map.
+      params: initial parameter pytree (any nesting; leaves are arrays).
+      key: run PRNG key; step i uses ``jax.random.fold_in(key, i)`` so runs
+        are reproducible and steps are independent.
+      steps / lr: Adam step count and (constant) learning rate.
+      callback: optional ``callback(step, value, params)`` for logging.
+    """
+    opt = adam_init(params)
+    jstep = jax.jit(adam_step, static_argnames=("lr", "b1", "b2", "eps"))
+    history = []
+    for i in range(steps):
+        v, g = neg_vg(params, jax.random.fold_in(key, i))
+        params, opt = jstep(params, g, opt, lr=lr)
+        history.append(float(v))
+        if callback is not None:
+            callback(i, float(v), params)
+    return SVIResult(params=params, history=history, n_steps=steps)

@@ -115,6 +115,74 @@ def main():
     assert all(np.isfinite(np.asarray(g)).all()
                for g in jax.tree.leaves(gl_c))
 
+    # --- minibatch-stochastic (SVI) bound on the mesh ----------------------
+    # Full-batch "SVI" (batch_blocks == every shard's block count) must hit
+    # the exact distributed bound: same blocks, scale 1, plus the key
+    # plumbing through shard_map/psum.  n=101 on 8 shards, chunk 4 ->
+    # padded to 128 -> 16 rows = 4 blocks per shard.
+    eng_svi_full = DistributedGP(mesh, data_axes=("data", "model"),
+                                 latent=False, chunk_size=4, batch_blocks=4)
+    data_s, w_s = eng_svi_full.put_data(y=y, mu=x)
+    vg_sf = eng_svi_full.make_value_and_grad(d, argnums=(0, 1))
+    v_sf, (gh_sf, gz_sf) = vg_sf(hyp, jnp.asarray(z), data_s["mu"], None,
+                                 data_s["y"], w_s, ones, nf,
+                                 jax.random.PRNGKey(0))
+    assert abs(float(v_sf) - float(v_ref)) < 1e-9 * abs(float(v_ref))
+    np.testing.assert_allclose(np.asarray(gz_sf), np.asarray(gz_ref),
+                               rtol=1e-8, atol=1e-10)
+    # Subsampled: deterministic per key, varies across keys (shards fold the
+    # step key with their flat index, so subsets differ shard-to-shard).
+    eng_svi = DistributedGP(mesh, data_axes=("data", "model"), latent=False,
+                            chunk_size=4, batch_blocks=2)
+    vg_s = eng_svi.make_value_and_grad(d, argnums=(0, 1))
+    sargs = (hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"], w_s,
+             ones, nf)
+    vals = [float(vg_s(*sargs, jax.random.PRNGKey(k))[0]) for k in range(6)]
+    assert all(np.isfinite(v) for v in vals)
+    assert float(vg_s(*sargs, jax.random.PRNGKey(0))[0]) == vals[0]
+    assert len(set(vals)) > 1
+    # rescale + SVI: the live fraction must come from the deterministic
+    # pre-sampling weights, not the stochastic reweighted count — with a
+    # failed shard, full-batch SVI rescale must equal exact-scan rescale.
+    eng_rs = DistributedGP(mesh, data_axes=("data", "model"), latent=False,
+                           failure_mode="rescale", chunk_size=4,
+                           batch_blocks=4)
+    vg_rs = eng_rs.make_value_and_grad(d, argnums=(0,))
+    v_rs, _ = vg_rs(hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"],
+                    w_s, jnp.ones((eng_rs.n_shards,)).at[2].set(0.0), nf,
+                    jax.random.PRNGKey(0))
+    eng_rs_ref = DistributedGP(mesh, data_axes=("data", "model"),
+                               latent=False, failure_mode="rescale",
+                               chunk_size=4)
+    v_rs_ref, _ = eng_rs_ref.make_value_and_grad(d, argnums=(0,))(
+        hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"], w_s,
+        jnp.ones((eng_rs_ref.n_shards,)).at[2].set(0.0), nf)
+    assert abs(float(v_rs) - float(v_rs_ref)) < 1e-9 * abs(float(v_rs_ref))
+    # Subsampled rescale stays finite and key-deterministic.
+    eng_rs2 = DistributedGP(mesh, data_axes=("data", "model"), latent=False,
+                            failure_mode="rescale", chunk_size=4,
+                            batch_blocks=2)
+    vg_rs2 = eng_rs2.make_value_and_grad(d, argnums=(0,))
+    v_a, _ = vg_rs2(hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"],
+                    w_s, jnp.ones((eng_rs2.n_shards,)).at[2].set(0.0), nf,
+                    jax.random.PRNGKey(1))
+    v_b, _ = vg_rs2(hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"],
+                    w_s, jnp.ones((eng_rs2.n_shards,)).at[2].set(0.0), nf,
+                    jax.random.PRNGKey(1))
+    assert np.isfinite(float(v_a)) and float(v_a) == float(v_b)
+
+    # Latent SVI on the mesh: full-batch == exact latent bound.
+    engl_svi = DistributedGP(mesh, data_axes=("data", "model"), latent=True,
+                             chunk_size=4, batch_blocks=4)
+    datal_s, wl_s = engl_svi.put_data(y=y, mu=x, s=s)
+    vgl_s = engl_svi.make_value_and_grad(d, argnums=(0, 1, 2, 3))
+    vl_s, gl_s = vgl_s(hyp, jnp.asarray(z), datal_s["mu"], datal_s["s"],
+                       datal_s["y"], wl_s, jnp.ones((engl_svi.n_shards,)),
+                       nf, jax.random.PRNGKey(0))
+    assert abs(float(vl_s) - float(vl_ref)) < 1e-9 * abs(float(vl_ref))
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree.leaves(gl_s))
+
     print("DIST-WORKER-OK")
 
 

@@ -1,0 +1,295 @@
+"""Minibatch-stochastic (SVI) map step: provable unbiasedness + plumbing.
+
+The estimator under test (``stats.partial_stats_chunked(batch_blocks=B)``):
+sample B of the nb row blocks uniformly without replacement, scan only
+those, scale the accumulated Stats by nb/B.  Every Stats field is a plain
+sum over points, so averaging the stochastic Stats over ALL size-B subsets
+must reproduce the exact streamed Stats *identically* (up to f64 summation
+order) — and therefore the collapsed bound and its gradients evaluated at
+the subset-averaged statistics reproduce the exact bound/gradients.  The
+tests enumerate the subsets via the ``block_indices`` hook (no sampling
+noise, no statistical tolerance), including padded final blocks, the
+latent path's per-point KL, and independent per-shard sampling.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BayesianGPLVM, SGPR
+from repro.core.bound import collapsed_bound
+from repro.core.distributed import DistributedGP
+from repro.core.stats import (Stats, partial_stats_chunked,
+                              sample_block_indices)
+from repro.launch.mesh import make_compat_mesh
+
+from conftest import make_regression
+
+
+def _mk_hyp(q):
+    return {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.full((q,), 0.1),
+            "log_beta": jnp.asarray(1.0)}
+
+
+def _assert_stats_close(a, b, rtol=1e-10, atol=1e-12):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+def _subset_average(subsets, stats_for_subset):
+    subsets = list(subsets)
+    acc = None
+    for sub in subsets:
+        st = stats_for_subset(jnp.asarray(sub))
+        acc = st if acc is None else acc + st
+    return acc.scale(1.0 / len(subsets))
+
+
+@pytest.mark.parametrize("latent", [False, True])
+def test_subset_averaged_stats_and_bound_equal_exact(rng, latent):
+    """E over all size-B subsets of the reweighted Stats == exact Stats, so
+    the bound (and anything else computed from the averaged statistics)
+    matches the exact streamed bound to f64 — with a padded final block and
+    the latent per-point KL reweighted along with the data terms."""
+    n, m, q, d, block, B = 53, 6, 2, 3, 8, 3   # nb = 7, last block padded
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    s = jnp.asarray(rng.uniform(0.05, 0.6, (n, q))) if latent else None
+    hyp = _mk_hyp(q)
+    nb = -(-n // block)
+
+    exact = partial_stats_chunked(hyp, z, y, x, s=s, latent=latent,
+                                  block_size=block)
+    avg = _subset_average(
+        itertools.combinations(range(nb), B),
+        lambda sub: partial_stats_chunked(hyp, z, y, x, s=s, latent=latent,
+                                          block_size=block, batch_blocks=B,
+                                          block_indices=sub))
+    _assert_stats_close(exact, avg)
+    b_exact = float(collapsed_bound(hyp, z, exact, d))
+    b_avg = float(collapsed_bound(hyp, z, avg, d))
+    assert abs(b_avg - b_exact) < 1e-10 * abs(b_exact)
+
+
+def test_subset_averaged_grads_equal_exact(rng):
+    """Gradient unbiasedness through the sampled scan: for any loss LINEAR
+    in the statistics, the subset-averaged stochastic gradients wrt (hyp, z)
+    equal the exact gradients to f64 (the stochastic Stats are linear in the
+    block contributions, so expectation and differentiation commute)."""
+    n, m, q, d, block, B = 41, 5, 2, 2, 8, 2   # nb = 6, padded final block
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    s = jnp.asarray(rng.uniform(0.05, 0.6, (n, q)))
+    hyp = _mk_hyp(q)
+    nb = -(-n // block)
+    # Fixed random contraction: one scalar that touches every Stats field.
+    vc = jnp.asarray(rng.standard_normal((m, d)))
+    vd = jnp.asarray(rng.standard_normal((m, m)))
+
+    def loss(h, zz, indices):
+        st = partial_stats_chunked(
+            h, zz, y, x, s=s, latent=True, block_size=block,
+            batch_blocks=None if indices is None else B,
+            block_indices=indices)
+        return (st.A + 2.0 * st.B + jnp.sum(vc * st.C) + jnp.sum(vd * st.D)
+                + 3.0 * st.KL + 0.5 * st.n)
+
+    g_exact = jax.grad(loss, argnums=(0, 1))(hyp, z, None)
+    subsets = list(itertools.combinations(range(nb), B))
+    acc = None
+    for sub in subsets:
+        g = jax.grad(loss, argnums=(0, 1))(hyp, z, jnp.asarray(sub))
+        acc = g if acc is None else jax.tree.map(jnp.add, acc, g)
+    g_avg = jax.tree.map(lambda t: t / len(subsets), acc)
+    for a, b in zip(jax.tree.leaves(g_exact), jax.tree.leaves(g_avg)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-9, atol=1e-11)
+
+
+def test_full_batch_svi_equals_exact_bound_and_grads(rng):
+    """batch_blocks == nb degrades to the exact scan: identical bound and
+    gradients (not just unbiased — bit-for-bit the same math)."""
+    n, m, q, d, block = 60, 7, 2, 2, 13    # nb = 5, padded final block
+    x, y = make_regression(rng, n=n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    nb = -(-n // block)
+
+    def neg(h, zz, batch_blocks, key):
+        st = partial_stats_chunked(h, zz, jnp.asarray(y), jnp.asarray(x),
+                                   s=None, latent=False, block_size=block,
+                                   batch_blocks=batch_blocks, key=key)
+        return -collapsed_bound(h, zz, st, d)
+
+    v0, (gh0, gz0) = jax.value_and_grad(neg, argnums=(0, 1))(
+        hyp, z, None, None)
+    v1, (gh1, gz1) = jax.jit(jax.value_and_grad(neg, argnums=(0, 1)),
+                             static_argnums=(2,))(
+        hyp, z, nb, jax.random.PRNGKey(0))
+    assert abs(float(v1) - float(v0)) < 1e-10 * abs(float(v0))
+    np.testing.assert_allclose(np.asarray(gz1), np.asarray(gz0),
+                               rtol=1e-9, atol=1e-11)
+    for k in gh0:
+        np.testing.assert_allclose(np.asarray(gh1[k]), np.asarray(gh0[k]),
+                                   rtol=1e-9, atol=1e-11)
+
+
+def test_per_shard_sampling_unbiased(rng):
+    """The distributed scheme — each shard samples ITS OWN blocks
+    independently and reweights locally before the sum — stays unbiased:
+    summing each shard's subset-averaged Stats equals the exact global
+    Stats.  (Independence factorises the expectation per shard.)"""
+    n, m, q, d, block, B, k_shards = 64, 5, 2, 2, 4, 2, 2
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+
+    exact = partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                                  block_size=block)
+    n_local = n // k_shards
+    nb_local = n_local // block
+    total = None
+    for sh in range(k_shards):
+        sl = slice(sh * n_local, (sh + 1) * n_local)
+        avg = _subset_average(
+            itertools.combinations(range(nb_local), B),
+            lambda sub, sl=sl: partial_stats_chunked(
+                hyp, z, y[sl], x[sl], s=None, latent=False,
+                block_size=block, batch_blocks=B, block_indices=sub))
+        total = avg if total is None else total + avg
+    _assert_stats_close(exact, total)
+
+
+def test_sample_block_indices_no_replacement():
+    nb, B = 11, 4
+    seen = set()
+    for i in range(20):
+        idx = np.asarray(sample_block_indices(jax.random.PRNGKey(i), nb, B))
+        assert idx.shape == (B,)
+        assert len(set(idx.tolist())) == B          # without replacement
+        assert idx.min() >= 0 and idx.max() < nb
+        seen.add(tuple(sorted(idx.tolist())))
+    assert len(seen) > 1                            # sampler actually varies
+
+
+def test_svi_validation_errors(rng):
+    y = jnp.asarray(rng.standard_normal((20, 1)))
+    x = jnp.asarray(rng.standard_normal((20, 2)))
+    hyp = _mk_hyp(2)
+    z = jnp.asarray(rng.standard_normal((4, 2)))
+    with pytest.raises(ValueError, match="requires block_size"):
+        partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                              block_size=None, batch_blocks=2)
+    with pytest.raises(ValueError, match="needs a PRNG key"):
+        partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                              block_size=4, batch_blocks=2)
+    with pytest.raises(ValueError, match="requires chunk_size"):
+        DistributedGP(make_compat_mesh((1,), ("data",)), batch_blocks=2)
+
+
+def test_distributed_svi_single_device(rng):
+    """Engine plumbing on a 1-device mesh: full-batch SVI == exact bound;
+    subsampled SVI is deterministic per key and varies across keys.
+    (Multi-device per-shard sampling parity runs in _dist_worker.py.)"""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d, block = 37, 5, 2, 1, 8           # padded to 40 -> nb = 5
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    nf = jnp.asarray(float(n))
+
+    eng_exact = DistributedGP(mesh, latent=False, chunk_size=block)
+    data, w = eng_exact.put_data(y=y, mu=x)
+    v_ref, _ = eng_exact.make_value_and_grad(d)(
+        hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf)
+
+    eng_full = DistributedGP(mesh, latent=False, chunk_size=block,
+                             batch_blocks=5)
+    v_full, (gh, gz) = eng_full.make_value_and_grad(d)(
+        hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf,
+        jax.random.PRNGKey(0))
+    assert abs(float(v_full) - float(v_ref)) < 1e-10 * abs(float(v_ref))
+    assert np.isfinite(np.asarray(gz)).all()
+
+    eng_svi = DistributedGP(mesh, latent=False, chunk_size=block,
+                            batch_blocks=2)
+    vg = eng_svi.make_value_and_grad(d)
+    args = (hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf)
+    vals = [float(vg(*args, jax.random.PRNGKey(k))[0]) for k in range(8)]
+    assert all(np.isfinite(v) for v in vals)
+    assert float(vg(*args, jax.random.PRNGKey(0))[0]) == vals[0]  # replayable
+    assert len(set(vals)) > 1            # different keys -> different subsets
+
+
+def test_make_gp_train_step_svi_smoke(rng):
+    from repro.train.steps import make_gp_train_step
+
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d = 24, 4, 2, 1
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    eng, step = make_gp_train_step(mesh, d, chunk_size=4, batch_blocks=2)
+    data, w = eng.put_data(y=y, mu=x)
+    v, (gh, gz) = step(_mk_hyp(q), z, data["mu"], None, data["y"], w,
+                       jnp.ones((1,)), jnp.asarray(float(n)),
+                       jax.random.PRNGKey(7))
+    assert np.isfinite(float(v))
+    assert np.isfinite(np.asarray(gz)).all()
+
+
+def test_sgpr_fit_svi_improves_exact_bound(rng):
+    x, y = make_regression(rng, n=160, q=1, d=1)
+    gp = SGPR(x, y, num_inducing=8, seed=0, chunk_size=16, batch_blocks=3)
+    b0 = gp.log_bound()
+    res = gp.fit_svi(steps=120, lr=3e-2, seed=0)
+    assert res.n_steps == 120 and np.isfinite(res.history).all()
+    assert gp.log_bound() > b0          # exact bound, stochastic optimiser
+    mean, var = gp.predict(x[:5])       # posterior path still works
+    assert np.isfinite(mean).all() and np.isfinite(var).all()
+
+
+def test_gplvm_fit_svi_improves_exact_bound(rng):
+    y = rng.standard_normal((48, 4))
+    lv = BayesianGPLVM(y, q=2, num_inducing=6, seed=0, chunk_size=8,
+                       batch_blocks=2)
+    b0 = lv.log_bound()
+    res = lv.fit_svi(steps=80, lr=2e-2, seed=0)
+    assert np.isfinite(res.history).all()
+    assert lv.log_bound() > b0
+
+
+def test_svi_composes_with_pallas_backend(rng):
+    """kernel_backend='pallas' (interpret mode off-TPU) under SVI: the fused
+    per-block hook sees only sampled blocks; full-batch == exact."""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d, block = 33, 6, 2, 1, 8           # padded to 40 -> nb = 5
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    nf = jnp.asarray(float(n))
+
+    eng_exact = DistributedGP(mesh, latent=False, chunk_size=block)
+    data, w = eng_exact.put_data(y=y, mu=x)
+    v_ref, _ = eng_exact.make_value_and_grad(d)(
+        hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf)
+
+    eng = DistributedGP(mesh, latent=False, chunk_size=block,
+                        kernel_backend="pallas", batch_blocks=5)
+    v_full, _ = eng.make_value_and_grad(d)(
+        hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf,
+        jax.random.PRNGKey(0))
+    # interpret mode computes in the caller's f64 -> f64-level parity
+    assert abs(float(v_full) - float(v_ref)) < 1e-8 * abs(float(v_ref))
+
+    eng_b = DistributedGP(mesh, latent=False, chunk_size=block,
+                          kernel_backend="pallas", batch_blocks=2)
+    v_b, _ = eng_b.make_value_and_grad(d)(
+        hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf,
+        jax.random.PRNGKey(1))
+    assert np.isfinite(float(v_b))
