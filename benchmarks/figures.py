@@ -282,3 +282,8 @@ def lm_train_microbench(arch="llama3.2-1b", steps=5):
     tok_s = b * t / dt
     print(f"  {arch} reduced: {dt * 1e3:.1f} ms/step, {tok_s:,.0f} tok/s")
     return [(f"lm/{arch}_step", dt * 1e6, f"{tok_s:.0f} tok/s")]
+
+
+# Beyond-paper serving benchmark (`--only predict`): lives in serving.py but
+# is re-exported here so the figure/bench namespace stays one-stop.
+from .serving import predict_serving  # noqa: E402,F401

@@ -6,7 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
 import argparse
 import sys
 
-from . import figures, streaming
+from . import figures, serving, streaming
 
 
 ALL = {
@@ -21,6 +21,7 @@ ALL = {
     "stream": streaming.streaming_map,
     "regmap": streaming.reg_map_backends,
     "svi": streaming.svi_map,
+    "predict": serving.predict_serving,
 }
 
 FAST_ARGS = {
@@ -37,6 +38,8 @@ FAST_ARGS = {
     "regmap": dict(n=4096, m=32, block=1024, iters=2),
     "svi": dict(n=4096, m=32, block=256, iters=2, batch_sweep=(1, 2, 4, 8),
                 n_mults=(1, 2)),
+    "predict": dict(n=4096, m_sweep=(16, 32), t_sweep=(64, 256, 1024),
+                    block=128, iters=2),
 }
 
 

@@ -1,0 +1,123 @@
+"""Serving-path benchmark: the predict subsystem vs the per-call q(u) path.
+
+Before the serving subsystem, every ``SGPR.predict`` call re-ran the q(u)
+factor solves (``optimal_qu``: chol(Kmm), chol(B), two triangular solve
+chains) un-jitted and then the un-jitted predictive math — per request.
+The ``serve`` subsystem does the factor work once (``extract_state``) and
+answers queries with a jitted block-scan of matmuls.
+
+Three measurements:
+  * legacy    — the old per-call path (un-jitted ``optimal_qu`` +
+                ``bound.predict`` per request), the baseline;
+  * cold      — state extraction + first (compiling) engine call: the
+                server-startup cost, paid once;
+  * warm      — steady-state engine latency/throughput (queries/sec) across
+                a sweep of query batch sizes t and inducing counts m, under
+                both kernel backends (the fused Pallas predict kernel runs
+                in interpret mode off-TPU — correctness/structure proxy;
+                the HBM-traffic win shows on TPU).
+
+Parity of every path against ``bound.predict`` is asserted as it runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bound as bound_mod
+from repro.core.stats import partial_stats
+from repro.serve import PredictEngine, extract_state
+
+from .gp_common import default_hyp
+
+
+def _fit_state(rng, n, m, q, d):
+    """A 'trained' posterior without the fit cost: stats at default hypers."""
+    hyp = default_hyp(q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return hyp, z, stats
+
+
+def _median_time(fn, iters):
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def predict_serving(n=20_000, q=3, d=2, m_sweep=(32, 64, 128),
+                    t_sweep=(128, 512, 2048, 8192), block=512, iters=5):
+    """Query throughput vs batch size and vs m, XLA vs Pallas backend,
+    cold (extract state) vs warm (cached state) vs the legacy per-call
+    q(u) path."""
+    rng = np.random.default_rng(3)
+    rows = []
+
+    for m in m_sweep:
+        hyp, z, stats = _fit_state(rng, n, m, q, d)
+        t_mid = t_sweep[len(t_sweep) // 2]
+        xs_mid = jnp.asarray(rng.standard_normal((t_mid, q)))
+
+        # -- legacy: factor solves + predictive math per call, un-jitted ----
+        def legacy_call(xs):
+            qu = bound_mod.optimal_qu(hyp, z, stats)
+            return bound_mod.predict(hyp, z, qu, xs)
+
+        mean_ref, var_ref = jax.block_until_ready(legacy_call(xs_mid))
+        t_legacy = _median_time(lambda: legacy_call(xs_mid), iters)
+
+        # -- cold: extraction + first (compiling) engine call ---------------
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(extract_state(hyp, z, stats))
+        eng = PredictEngine(state, block_size=block)
+        jax.block_until_ready(eng.predict(xs_mid))
+        t_cold = time.perf_counter() - t0
+        rows.append((f"predict/cold_m={m}", t_cold * 1e6,
+                     f"extract+compile+first_call_t={t_mid}"))
+
+        # -- warm parity + throughput at the midpoint batch -----------------
+        mean, var = eng.predict(xs_mid)
+        rel = float(jnp.max(jnp.abs(mean - mean_ref)) /
+                    jnp.max(jnp.abs(mean_ref)))
+        assert rel < 1e-8, f"serving mean diverged: rel={rel:.2e}"
+        assert float(jnp.max(jnp.abs(var - var_ref))) < 1e-8
+        t_warm = _median_time(lambda: eng.predict(xs_mid), iters)
+        speedup = t_legacy / t_warm
+        rows.append((f"predict/legacy_m={m}_t={t_mid}", t_legacy * 1e6,
+                     f"qps={t_mid / t_legacy:.0f}"))
+        rows.append((f"predict/warm_m={m}_t={t_mid}", t_warm * 1e6,
+                     f"qps={t_mid / t_warm:.0f};speedup_vs_legacy={speedup:.1f}x"))
+        print(f"  m={m:4d} t={t_mid}: legacy {t_legacy * 1e3:8.2f} ms/call "
+              f"({t_mid / t_legacy:8.0f} q/s)   warm {t_warm * 1e3:8.2f} ms "
+              f"({t_mid / t_warm:8.0f} q/s)   {speedup:5.1f}x   "
+              f"cold {t_cold * 1e3:.0f} ms")
+
+    # -- batch-size sweep at the midpoint m, both backends ------------------
+    m = m_sweep[len(m_sweep) // 2]
+    hyp, z, stats = _fit_state(rng, n, m, q, d)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    for backend in ("xla", "pallas"):
+        eng = PredictEngine(state, block_size=block, kernel_backend=backend)
+        for t in t_sweep:
+            xs = jnp.asarray(rng.standard_normal((t, q)))
+            mean_ref, _ = bound_mod.predict(hyp, z, qu, xs)
+            mean, _ = eng.predict(xs)   # compile + parity
+            rel = float(jnp.max(jnp.abs(mean - mean_ref)) /
+                        jnp.max(jnp.abs(mean_ref)))
+            tol = 1e-4 if jax.default_backend() == "tpu" else 1e-8
+            assert rel < tol, f"[{backend}] t={t} diverged: rel={rel:.2e}"
+            dt = _median_time(lambda: eng.predict(xs), iters)
+            rows.append((f"predict/{backend}_m={m}_t={t}", dt * 1e6,
+                         f"qps={t / dt:.0f}"))
+            print(f"  [{backend}] m={m} t={t:>6}: {dt * 1e3:8.2f} ms/batch  "
+                  f"{t / dt:10.0f} q/s")
+    return rows

@@ -60,7 +60,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .bound import collapsed_bound
+from .bound import DEFAULT_JITTER, collapsed_bound
 from .stats import Stats, partial_stats_chunked
 
 try:  # jax >= 0.6 exposes shard_map at top level
@@ -202,6 +202,7 @@ class DistributedGP:
         self.n_shards = num_shards(mesh, self.data_axes)
         self._data_spec = P(self.data_axes)
         self._rep_spec = P()
+        self._stats_prog = None   # cached reduced_stats program (serving)
 
     # -- sharding helpers ---------------------------------------------------
     def data_sharding(self) -> NamedSharding:
@@ -341,3 +342,35 @@ class DistributedGP:
             out_specs=self._rep_spec,
         )
         return jax.jit(f)
+
+    # -- serving ------------------------------------------------------------
+    def predictive_state(self, hyp, z, y, mu, s, w, fmask=None,
+                         jitter: float = DEFAULT_JITTER):
+        """One exact map-reduce over the sharded data -> the frozen
+        ``serve.PredictiveState`` (replicated; constant-size).  This is the
+        training-to-serving handoff: after this call neither the engine nor
+        the data shards are needed to answer queries — ``serve.save_state``
+        the result and a server restarts from disk alone."""
+        from ..serve import extract_state
+
+        if self._stats_prog is None:
+            self._stats_prog = self.reduced_stats(d=0)
+        if fmask is None:
+            fmask = jnp.ones((self.n_shards,))
+        st = self._stats_prog(hyp, z, y, mu, s, w, fmask)
+        return extract_state(hyp, z, st, jitter=jitter)
+
+    def predict_engine(self, state, block_size: int = 256,
+                       kernel_backend: str | None = None,
+                       donate: bool = False):
+        """A ``serve.PredictEngine`` sharding query batches over this
+        engine's mesh/data axes (state replicated, predictions row-local —
+        zero communication).  ``kernel_backend`` defaults to the training
+        engine's backend."""
+        from ..serve import PredictEngine
+
+        return PredictEngine(
+            state, block_size=block_size, mesh=self.mesh,
+            data_axes=self.data_axes,
+            kernel_backend=kernel_backend or self.kernel_backend,
+            donate=donate)

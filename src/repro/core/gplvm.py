@@ -61,6 +61,7 @@ class BayesianGPLVM:
             "mu": jnp.asarray(mu0, jnp.float64),
             "log_s": jnp.full((self.n, q), np.log(s0), jnp.float64),
         }
+        self._pstate_cache = None   # serve.PredictiveState (q(u) factor solves)
 
         def neg_bound(params, y_):
             st = self._map_stats(
@@ -104,6 +105,7 @@ class BayesianGPLVM:
 
         res = scg(fg, np.asarray(flat0, np.float64), max_iters=max_iters)
         self.params = jax.tree.map(jnp.asarray, unravel(jnp.asarray(res.x)))
+        self._pstate_cache = None
         if verbose:
             print(f"GPLVM fit(joint): bound={-res.f:.4f} iters={res.n_iters}")
         return res
@@ -140,6 +142,7 @@ class BayesianGPLVM:
         res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
                       jax.random.PRNGKey(seed), steps=steps, lr=lr)
         self.params = res.params
+        self._pstate_cache = None
         if verbose:
             print(f"GPLVM fit_svi: est. bound={-res.history[-1]:.4f} "
                   f"steps={res.n_steps} (B={bb} blocks/step)")
@@ -176,6 +179,7 @@ class BayesianGPLVM:
             if verbose:
                 print(f"  round {r}: bound={-res.f:.4f}")
         self.params = {**g, **l}
+        self._pstate_cache = None
         return res
 
     # -- posterior / diagnostics ---------------------------------------------
@@ -187,6 +191,28 @@ class BayesianGPLVM:
     def qu(self) -> bound_mod.QU:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],
                                     self._stats(), jitter=self.jitter)
+
+    def predictive_state(self):
+        """The frozen ``serve.PredictiveState`` for the current params —
+        the q(u) factor solves done once, cached until a fit moves them."""
+        if self._pstate_cache is None:
+            from ..serve import state_from_model
+            self._pstate_cache = state_from_model(self)
+        return self._pstate_cache
+
+    def serve_engine(self, block_size: int = 256, mesh=None,
+                     data_axes=("data",), kernel_backend: str = "xla",
+                     donate: bool = False):
+        """A ``serve.PredictEngine`` over the current predictive state:
+        queries are *latent* points (t, q) — pair with a q(X*) optimisation
+        (:meth:`reconstruct`) to serve observed-space queries.  (The GPLVM
+        trains through the psi-statistics path and has no regression
+        ``kernel_backend`` to inherit, so the serving backend defaults to
+        "xla" here.)"""
+        from ..serve import PredictEngine
+        return PredictEngine(self.predictive_state(), block_size=block_size,
+                             mesh=mesh, data_axes=data_axes,
+                             kernel_backend=kernel_backend, donate=donate)
 
     def ard_weights(self) -> np.ndarray:
         """1/ell^2 — the per-dimension relevance the paper inspects (fig 4/7)."""
@@ -202,17 +228,21 @@ class BayesianGPLVM:
         Optimises a q(X*) for each test point against the observed dims only,
         then predicts the full output via the sparse posterior.
         """
+        from ..serve import posterior as serve_posterior
+
         obs = jnp.asarray(observed)
         yp = jnp.asarray(y_partial, jnp.float64)
         t = yp.shape[0]
-        qu = self.qu()
-        hyp, z = self.params["hyp"], self.params["z"]
+        # The serving subsystem's frozen state: the q(u) factor solves happen
+        # once here, not per objective evaluation inside the SCG loop.
+        state = self.predictive_state()
+        hyp = self.params["hyp"]
 
         def neg_obj(local):
             mu, log_s = local["mu"], local["log_s"]
             # Expected log-lik of observed dims under q(X*) + KL, using the
             # trained posterior mean projection (fast approximation).
-            mean, var = bound_mod.predict(hyp, z, qu, mu)
+            mean, var = serve_posterior.predict_mean_var(state, mu)
             beta = jnp.exp(hyp["log_beta"])
             resid = jnp.where(obs[None, :], yp - mean, 0.0)
             n_obs = jnp.sum(obs)
@@ -242,5 +272,5 @@ class BayesianGPLVM:
 
         res = scg(fg, np.asarray(flat0, np.float64), max_iters=iters)
         local = unravel(jnp.asarray(res.x))
-        mean, _ = bound_mod.predict(hyp, z, qu, local["mu"])
+        mean, _ = serve_posterior.predict_mean_var(state, local["mu"])
         return np.asarray(mean)

@@ -67,6 +67,8 @@ class SGPR:
             "z": jnp.asarray(z0, jnp.float64),
         }
         self._stats_cache = None
+        self._pstate_cache = None   # serve.PredictiveState (q(u) factor solves)
+        self._engine_cache = None   # default serve.PredictEngine
 
         def neg_bound(params, x_, y_):
             st = self._map_stats(params["hyp"], params["z"], y_, x_)
@@ -98,7 +100,7 @@ class SGPR:
 
         res = scg(fg, np.asarray(flat0, np.float64), max_iters=max_iters)
         self.params = jax.tree.map(jnp.asarray, unravel(jnp.asarray(res.x)))
-        self._stats_cache = None
+        self._invalidate_posterior()
         if verbose:
             print(f"SGPR fit: bound={-res.f:.4f} iters={res.n_iters} "
                   f"evals={res.n_evals} converged={res.converged}")
@@ -138,13 +140,21 @@ class SGPR:
         res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
                       jax.random.PRNGKey(seed), steps=steps, lr=lr)
         self.params = res.params
-        self._stats_cache = None
+        self._invalidate_posterior()
         if verbose:
             print(f"SGPR fit_svi: est. bound={-res.history[-1]:.4f} "
                   f"steps={res.n_steps} (B={bb} blocks/step)")
         return res
 
     # -- posterior ----------------------------------------------------------
+    def _invalidate_posterior(self):
+        """New params -> every cached posterior quantity is stale: the
+        reduced Stats, the q(u) factor solves (PredictiveState), and the
+        jitted engine holding that state."""
+        self._stats_cache = None
+        self._pstate_cache = None
+        self._engine_cache = None
+
     def _stats(self):
         if self._stats_cache is None:
             self._stats_cache = self._map_stats(
@@ -155,8 +165,36 @@ class SGPR:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],
                                     self._stats(), jitter=self.jitter)
 
-    def predict(self, xstar: np.ndarray, include_noise: bool = False):
-        mean, var = bound_mod.predict(
-            self.params["hyp"], self.params["z"], self.qu(),
-            jnp.asarray(xstar, jnp.float64), include_noise=include_noise)
-        return np.asarray(mean), np.asarray(var)
+    def predictive_state(self):
+        """The frozen ``serve.PredictiveState`` for the current params —
+        extracted once (map-reduce + q(u) factor solves) and cached until
+        ``fit``/``fit_svi`` move the parameters."""
+        if self._pstate_cache is None:
+            from ..serve import state_from_model
+            self._pstate_cache = state_from_model(self)
+        return self._pstate_cache
+
+    def serve_engine(self, block_size: int = 256, mesh=None,
+                     data_axes=("data",), kernel_backend: str | None = None,
+                     donate: bool = False):
+        """A ``serve.PredictEngine`` over the current predictive state (a
+        fresh engine every call — callers own its lifetime; ``predict``
+        keeps its own cached default).  ``kernel_backend`` defaults to the
+        model's own training backend."""
+        from ..serve import PredictEngine
+        return PredictEngine(self.predictive_state(), block_size=block_size,
+                             mesh=mesh, data_axes=data_axes,
+                             kernel_backend=kernel_backend or self.kernel_backend,
+                             donate=donate)
+
+    def predict(self, xstar: np.ndarray, include_noise: bool = False,
+                full_cov: bool = False):
+        """Thin wrapper over the serving subsystem: the q(u)/factor solves
+        are cached in the ``PredictiveState`` (not re-done per request) and
+        queries run through the jitted block engine."""
+        if self._engine_cache is None:
+            self._engine_cache = self.serve_engine()
+        out = self._engine_cache(jnp.asarray(xstar, jnp.float64),
+                                 include_noise=include_noise,
+                                 full_cov=full_cov)
+        return tuple(np.asarray(o) for o in out)

@@ -3,8 +3,11 @@
 psi_stats        — the GPLVM Map-step (O(n m^2 q) psi2/psi1) as MXU matmuls
 reg_stats        — the regression Map-step: knm eval + b/C/D contractions
                    fused in one VMEM pass
+predict          — the serving step: ksm eval + mean/var contractions fused
+                   in one VMEM pass (forward-only, no custom_vjp)
 flash_attention  — streaming-softmax attention for LM prefill
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
-padding, backend select, custom_vjp), ref.py (pure-jnp oracle).
+padding, backend select, custom_vjp where grads are needed), ref.py
+(pure-jnp oracle).
 See docs/kernels.md for the shared tiling contract.
 """

@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ops import predict_fn_for_engine, predict_stats
+
+__all__ = ["kernel", "ops", "ref", "predict_fn_for_engine", "predict_stats"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused serving predict kernel.
+
+Independent of both the Pallas code path and ``repro.core.gp_kernels``;
+states the two serving statistics directly from the SE-ARD kernel
+definition and the precomputed state contractions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def predict_ref(log_sf2, log_ell, z, a_mean, g, x):
+    """(mean (t, d), quad (t,)) of the serving map against state (a_mean, g)."""
+    ell = jnp.exp(log_ell)
+    sf2 = jnp.exp(log_sf2)
+    dd = x[:, None, :] / ell - z[None, :, :] / ell
+    ksm = sf2 * jnp.exp(-0.5 * jnp.sum(dd * dd, axis=-1))     # (t, m)
+    mean = ksm @ a_mean
+    quad = jnp.sum((ksm @ g) * ksm, axis=1)
+    return mean, quad

@@ -1,0 +1,22 @@
+"""Posterior serving subsystem: training state -> frozen predictive state ->
+batched/sharded low-latency predict engine.
+
+  posterior   PredictiveState (frozen pytree of query-independent factors),
+              extract_state, save_state/load_state (checkpoint layer),
+              predict_mean_var / predict_full_cov (the XLA query math)
+  engine      PredictEngine: jitted fixed-block lax.scan predict, optional
+              mesh sharding, xla|pallas backend, include_noise/full_cov
+
+See docs/serving.md for the serving guide and tuning table.
+"""
+from . import engine, posterior
+from .engine import PredictEngine
+from .posterior import (PredictiveState, extract_state, load_state,
+                        predict_full_cov, predict_mean_var, save_state,
+                        state_from_model)
+
+__all__ = [
+    "engine", "posterior", "PredictEngine", "PredictiveState",
+    "extract_state", "load_state", "predict_full_cov", "predict_mean_var",
+    "save_state", "state_from_model",
+]

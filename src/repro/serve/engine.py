@@ -1,0 +1,163 @@
+"""Batched, sharded, low-latency predict engine over a PredictiveState.
+
+Serving shape of the problem: a stream of query batches of varying size
+against one frozen :class:`~repro.serve.posterior.PredictiveState`.  The
+engine turns that into a shape-static jitted program:
+
+  * **Fixed-size query blocks** — queries are padded up to a multiple of
+    ``block_size`` (times ``n_shards`` on a mesh), mirroring
+    ``distributed.pad_and_shard``; pad rows are zeros, compute garbage, and
+    are sliced off before returning, so only ``ceil(t / block_size)``
+    distinct program shapes ever compile.
+  * **``lax.scan`` over blocks** — one block's (block, m) kernel slab is
+    live at a time, so serving memory is O(block·m + m² + m·d) regardless
+    of the batch size.
+  * **Optional mesh sharding** — with ``mesh=``, query blocks shard across
+    the data axes while the state is replicated (``shard_map``); each device
+    scans its own slice and no collective is needed (predictions are
+    row-local, the serving analogue of the paper's zero-communication map).
+  * **Backend switch** — ``kernel_backend="pallas"`` routes each block
+    through the fused ``kernels/predict`` op (ksm evaluated tile-by-tile in
+    VMEM, mean/var contractions fused in the same pass); ``"xla"`` (default)
+    runs the same math as two matmuls.
+
+The per-query hot path contains no factorizations and no triangular solves
+— those happened once at ``extract_state`` time.  ``include_noise`` adds
+``1/beta`` outside the jitted program (one vector add), so both variants
+share one compiled executable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core.distributed import num_shards, shard_map
+from . import posterior
+
+Array = jax.Array
+
+
+class PredictEngine:
+    """Jitted block-scan (optionally mesh-sharded) predict over a frozen state.
+
+    Args:
+      state: a :class:`~repro.serve.posterior.PredictiveState`.
+      block_size: rows per scan block. Queries are padded up to a multiple
+        of ``n_shards * block_size``; smaller blocks mean less padding waste
+        on small batches, larger blocks amortise scan overhead on big ones
+        (tuning table in docs/serving.md).
+      mesh / data_axes: if given, shard query batches across these mesh axes
+        with the state replicated on every device.
+      kernel_backend: "xla" (default) or "pallas" (the fused
+        ``kernels/predict`` op; forward-only — serving never differentiates).
+      donate: donate the padded query buffer to the jitted program
+        (``donate_argnums``) so XLA may reuse it for outputs. Off by default
+        — some backends (CPU) cannot honour it and warn.
+    """
+
+    def __init__(self, state: posterior.PredictiveState,
+                 block_size: int = 256, mesh=None, data_axes=("data",),
+                 kernel_backend: str = "xla", donate: bool = False):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if kernel_backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
+        self.block_size = block_size
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.kernel_backend = kernel_backend
+        self.donate = donate
+        self.n_shards = 1 if mesh is None else num_shards(mesh, self.data_axes)
+
+        if kernel_backend == "pallas":
+            from ..kernels.predict import predict_fn_for_engine
+            # Match the kernel's query tile to the scan block so no block is
+            # zero-padded up to a larger tile inside the op (capped at 128 —
+            # one MXU-rows worth — for big scan blocks; min sublane is 8).
+            block_t = min(128, block_size + (-block_size) % 8)
+            self._block_fn = predict_fn_for_engine(block_t=block_t)
+        else:
+            self._block_fn = posterior.predict_mean_var
+
+        if mesh is not None:
+            self._data_spec = P(self.data_axes)
+            self._rep_spec = P()
+            state = jax.device_put(state, NamedSharding(mesh, self._rep_spec))
+        self.state = state
+
+        def scan_blocks(st, xq):
+            # (t_local, q) -> block-scan -> ((t_local, d), (t_local,))
+            t_local = xq.shape[0]
+            nb = t_local // self.block_size
+            xb = xq.reshape(nb, self.block_size, xq.shape[1])
+
+            def body(carry, x_blk):
+                return carry, self._block_fn(st, x_blk)
+
+            _, (mean, var) = lax.scan(body, None, xb)
+            return mean.reshape(t_local, -1), var.reshape(t_local)
+
+        if mesh is None:
+            run = scan_blocks
+        else:
+            run = shard_map(scan_blocks, mesh=mesh,
+                            in_specs=(self._rep_spec, self._data_spec),
+                            out_specs=(self._data_spec, self._data_spec))
+        self._run = jax.jit(run, donate_argnums=(1,) if donate else ())
+        self._run_full = jax.jit(posterior.predict_full_cov)
+
+    # -- the serving entry points -------------------------------------------
+    def pad_queries(self, xstar) -> tuple[Array, int]:
+        """Pad (t, q) queries up to a multiple of ``n_shards * block_size``
+        with zero rows (mirroring ``pad_and_shard``); returns (padded, t)."""
+        xq = jnp.asarray(xstar, self.state.z.dtype)
+        t = xq.shape[0]
+        mult = self.n_shards * self.block_size
+        pad = (-t) % mult
+        if pad:
+            xq = jnp.pad(xq, ((0, pad), (0, 0)))
+        elif self.donate and xq is xstar:
+            # No pad/cast copy was made, so the caller's own buffer would be
+            # donated (and deleted) — donation may only eat an engine-owned
+            # buffer.
+            xq = jnp.array(xq, copy=True)
+        if self.mesh is not None:
+            xq = jax.device_put(xq, NamedSharding(self.mesh, self._data_spec))
+        return xq, t
+
+    def predict(self, xstar, include_noise: bool = False):
+        """Batched diag-variance prediction: ``(mean (t, d), var (t,))``."""
+        xq, t = self.pad_queries(xstar)
+        mean, var = self._run(self.state, xq)
+        mean, var = mean[:t], var[:t]
+        if include_noise:
+            var = var + jnp.exp(-self.state.hyp["log_beta"])
+        return mean, var
+
+    def predict_full_cov(self, xstar, include_noise: bool = False):
+        """Full-covariance mode: ``(mean (t, d), cov (t, t))``.  Computed in
+        one piece (cross-covariances couple all query pairs) — the small-t
+        mode; it bypasses the block scan and the mesh."""
+        xq = jnp.asarray(xstar, self.state.z.dtype)
+        mean, cov = self._run_full(self.state, xq)
+        if include_noise:
+            cov = cov + jnp.exp(-self.state.hyp["log_beta"]) * jnp.eye(
+                xq.shape[0], dtype=cov.dtype)
+        return mean, cov
+
+    def __call__(self, xstar, include_noise: bool = False,
+                 full_cov: bool = False):
+        if full_cov:
+            return self.predict_full_cov(xstar, include_noise=include_noise)
+        return self.predict(xstar, include_noise=include_noise)
+
+    def predict_np(self, xstar, include_noise: bool = False):
+        """predict + device_get — the convenience wrapper the sequential
+        models' ``.predict`` delegates to."""
+        mean, var = self.predict(xstar, include_noise=include_noise)
+        return np.asarray(mean), np.asarray(var)

@@ -1,0 +1,186 @@
+"""Frozen predictive state — the training→serving handoff.
+
+The paper's re-parametrisation means that after the map-reduce over data,
+*everything* a prediction needs is a constant-size function of the reduced
+statistics: the kernel hyper-parameters, the inducing inputs Z, and the
+factors of the optimal q(u).  None of it depends on the query.  A server
+therefore never has to see training data — it loads a
+:class:`PredictiveState` and answers queries with matmuls only.
+
+:func:`extract_state` performs every query-independent solve exactly once:
+
+    L  = chol(Kmm)                       (the ``optimal_qu`` factors)
+    LB = chol(I + b L^-1 D L^-T)         (whitened chol(Sigma), Sigma=Kmm+bD)
+    c2 = LB^-1 L^-1 C                    (the q(u) mean solve)
+
+and then folds them into two *serving contractions* so the per-query hot
+path (``serve.engine``, ``kernels/predict``) contains no triangular solves
+at all:
+
+    a_mean = b L^-T LB^-T c2             (m, d)   mean = K*m @ a_mean
+    g      = Kmm^-1 - Sigma^-1           (m, m)   var  = k** - rowsum((K*m @ g) * K*m)
+
+Both forms are algebraically identical to ``core.bound.predict`` (which
+re-derives them from ``QU`` per call); parity is tested to f64 precision in
+``tests/test_serving.py``.
+
+``save``/``load`` go through the existing checkpoint layer
+(``repro.checkpoint``), so a serving process can start from an ``.npz`` +
+sidecar pair without importing any training machinery state.
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from .. import checkpoint as ckpt
+from ..core import gp_kernels as gpk
+from ..core.bound import DEFAULT_JITTER, _chol_kmm
+from ..core.stats import Stats
+
+Array = jax.Array
+
+
+class PredictiveState(NamedTuple):
+    """Everything prediction needs, none of it query-dependent.
+
+    A frozen pytree: jit-traceable, psum/device_put-able, checkpointable.
+    ``chol_kmm``/``chol_sigma``/``c2`` are the raw q(u) factors (kept so the
+    state can reconstruct ``optimal_qu`` quantities, e.g. for posterior
+    sampling); ``a_mean``/``g`` are the precomputed serving contractions the
+    engines actually use per query.
+    """
+
+    hyp: dict          # {"log_sf2": (), "log_ell": (q,), "log_beta": ()}
+    z: Array           # (m, q) inducing inputs
+    chol_kmm: Array    # (m, m) L = chol(Kmm + jitter)
+    chol_sigma: Array  # (m, m) LB = chol(I + b L^-1 D L^-T)
+    c2: Array          # (m, d) LB^-1 L^-1 C (whitened info vector)
+    a_mean: Array      # (m, d) b L^-T LB^-T c2
+    g: Array           # (m, m) Kmm^-1 - Sigma^-1 (PSD explained-variance)
+
+    @property
+    def m(self) -> int:
+        return self.z.shape[0]
+
+    @property
+    def q(self) -> int:
+        return self.z.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.c2.shape[1]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def extract_state(hyp: dict, z: Array, stats: Stats,
+                  jitter: float = DEFAULT_JITTER) -> PredictiveState:
+    """One-time extraction: all query-independent factorizations and solves.
+
+    Same math as ``core.bound.optimal_qu`` plus the two serving
+    contractions.  O(m^3) once; afterwards every predict is O(t m (m + d)).
+    """
+    beta = jnp.exp(hyp["log_beta"])
+    m = z.shape[0]
+    L = _chol_kmm(hyp, z, jitter)
+    LiD = jsl.solve_triangular(L, stats.D, lower=True)
+    W = jsl.solve_triangular(L, LiD.T, lower=True).T
+    Bmat = jnp.eye(m, dtype=z.dtype) + beta * W
+    LB = jnp.linalg.cholesky(Bmat)
+    LiC = jsl.solve_triangular(L, stats.C, lower=True)
+    c2 = jsl.solve_triangular(LB, LiC, lower=True)
+
+    eye = jnp.eye(m, dtype=z.dtype)
+    Li = jsl.solve_triangular(L, eye, lower=True)        # L^-1
+    LBi = jsl.solve_triangular(LB, eye, lower=True)      # LB^-1
+    v1 = Li.T                                            # L^-T
+    v2 = v1 @ LBi.T                                      # L^-T LB^-T
+    a_mean = beta * (v2 @ c2)
+    g = v1 @ v1.T - v2 @ v2.T                            # Kmm^-1 - Sigma^-1
+    return PredictiveState(hyp=hyp, z=z, chol_kmm=L, chol_sigma=LB, c2=c2,
+                           a_mean=a_mean, g=g)
+
+
+def state_from_model(model) -> PredictiveState:
+    """Extract from a fitted sequential model (``SGPR``/``BayesianGPLVM``):
+    runs the model's exact map-reduce once for the reduced Stats, then
+    :func:`extract_state`."""
+    return extract_state(model.params["hyp"], model.params["z"],
+                         model._stats(), jitter=model.jitter)
+
+
+# -- query-side math (the XLA serving path; engine.py scans it per block) ---
+
+def predict_mean_var(state: PredictiveState, xstar: Array):
+    """Diag-variance predictive posterior at ``xstar`` (t, q) — matmuls only.
+
+    Returns ``(mean (t, d), var (t,))`` — noise-free; callers add ``1/beta``
+    for ``include_noise``.  Differentiable in ``xstar`` (plain jnp), which
+    the GPLVM reconstruction path relies on.
+    """
+    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)          # (t, m)
+    mean = ksm @ state.a_mean
+    quad = jnp.sum((ksm @ state.g) * ksm, axis=1)
+    var = gpk.ard_kdiag(state.hyp, xstar) - quad
+    return mean, var
+
+
+def predict_full_cov(state: PredictiveState, xstar: Array):
+    """Full predictive covariance: ``(mean (t, d), cov (t, t))``, noise-free.
+
+    Cross-covariances couple every query pair, so this is computed in one
+    piece rather than through the block engine — the small-t mode.
+    """
+    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)
+    mean = ksm @ state.a_mean
+    kss = gpk.ard_kernel(state.hyp, xstar, xstar)
+    cov = kss - ksm @ state.g @ ksm.T
+    return mean, cov
+
+
+# -- persistence (the existing checkpoint layer) ----------------------------
+
+def save_state(path: str | pathlib.Path, state: PredictiveState,
+               metadata: dict | None = None) -> pathlib.Path:
+    """Atomic write via ``repro.checkpoint.save``; shape metadata rides in
+    the sidecar so :func:`load_state` needs no template.  The keys
+    ``m``/``q``/``d``/``dtype`` are reserved for that restore template —
+    user ``metadata`` may not shadow them."""
+    reserved = {"m", "q", "d", "dtype"}
+    clash = reserved & set(metadata or ())
+    if clash:
+        raise ValueError(
+            f"metadata keys {sorted(clash)} are reserved for the restore "
+            "template — rename them")
+    meta = {**(metadata or {}), "m": state.m, "q": state.q, "d": state.d,
+            "dtype": str(state.z.dtype)}
+    return ckpt.save(path, state, metadata=meta)
+
+
+def load_state(path: str | pathlib.Path) -> tuple[PredictiveState, dict]:
+    """Restore a :class:`PredictiveState` (plus user metadata) from disk.
+
+    Builds the restore template from the sidecar's (m, q, d) — no model, no
+    training data, no fitted object required on the serving host.
+    """
+    import json
+
+    meta = json.loads(pathlib.Path(path).with_suffix(".json").read_text())
+    md = meta["metadata"]
+    m, q, d = md["m"], md["q"], md["d"]
+    dt = jnp.dtype(md.get("dtype", "float64"))
+
+    def sds(*shape):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    like = PredictiveState(
+        hyp={"log_sf2": sds(), "log_ell": sds(q), "log_beta": sds()},
+        z=sds(m, q), chol_kmm=sds(m, m), chol_sigma=sds(m, m),
+        c2=sds(m, d), a_mean=sds(m, d), g=sds(m, m))
+    state, md_out = ckpt.restore(path, like)
+    return PredictiveState(*jax.tree.map(jnp.asarray, tuple(state))), md_out

@@ -1,0 +1,285 @@
+"""Posterior serving subsystem: state extraction, persistence, and the
+batched block predict engine — all parity-tested against the canonical
+``core.bound.predict`` to f64 precision.
+
+The serving contract: ``extract_state`` runs every query-independent solve
+once, ``PredictEngine`` answers padded fixed-size blocks through a jitted
+``lax.scan``, and neither step may move mean/var away from the per-call
+``optimal_qu`` + ``predict`` reference beyond float64 rounding.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SGPR, BayesianGPLVM
+from repro.core import bound as bound_mod
+from repro.core.stats import partial_stats
+from repro.kernels.predict import ops as p_ops
+from repro.kernels.predict import ref as p_ref
+from repro.serve import (PredictEngine, extract_state, load_state,
+                         predict_full_cov, predict_mean_var, save_state,
+                         state_from_model)
+
+from conftest import make_regression
+
+
+def _hyp(rng, q):
+    return {"log_sf2": jnp.asarray(rng.uniform(-0.5, 0.8)),
+            "log_ell": jnp.asarray(rng.uniform(-0.4, 0.4, q)),
+            "log_beta": jnp.asarray(1.2)}
+
+
+def _posterior(rng, n=90, m=13, q=2, d=3):
+    hyp = _hyp(rng, q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return hyp, z, stats
+
+
+def test_state_matches_optimal_qu_factors(rng):
+    """The state's raw factors are exactly optimal_qu's (same solves)."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    # extract_state is jitted (optimal_qu is not) — XLA fusion reorders a
+    # few flops, so "exact" here is f64 rounding, not bitwise.
+    np.testing.assert_allclose(np.asarray(state.chol_kmm), np.asarray(qu.L),
+                               rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(state.chol_sigma), np.asarray(qu.LB),
+                               rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(state.c2), np.asarray(qu.c2),
+                               rtol=1e-12, atol=1e-14)
+    assert (state.m, state.q, state.d) == (13, 2, 3)
+
+
+def test_state_predict_parity(rng):
+    """The precomputed-contraction math == the per-call solve math (f64)."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    xs = jnp.asarray(rng.standard_normal((41, 2)))
+    m_ref, v_ref = bound_mod.predict(hyp, z, qu, xs)
+    mean, var = predict_mean_var(state, xs)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                               rtol=1e-8, atol=1e-10)
+    # full covariance mode
+    m_rc, c_rc = bound_mod.predict(hyp, z, qu, xs, full_cov=True)
+    mean_f, cov = predict_full_cov(state, xs)
+    np.testing.assert_allclose(np.asarray(cov), np.asarray(c_rc),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(mean_f), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+
+
+@pytest.mark.parametrize("t,block", [
+    (1, 8),      # single query, heavy padding
+    (37, 8),     # odd count, several blocks + padded tail
+    (64, 16),    # exact multiple — no padding branch
+    (101, 64),   # pad nearly a whole block
+])
+def test_block_engine_parity_and_padding(rng, t, block):
+    """Pad rows are ignored: the block engine matches bound.predict for odd
+    query counts at every block size, diag var and noise variants."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    xs = jnp.asarray(rng.standard_normal((t, 2)))
+    eng = PredictEngine(state, block_size=block)
+    for noise in (False, True):
+        m_ref, v_ref = bound_mod.predict(hyp, z, qu, xs, include_noise=noise)
+        mean, var = eng.predict(xs, include_noise=noise)
+        assert mean.shape == (t, 3) and var.shape == (t,)
+        np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                                   rtol=1e-9, atol=1e-11)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                                   rtol=1e-8, atol=1e-10)
+
+
+def test_engine_full_cov_and_call(rng):
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    xs = jnp.asarray(rng.standard_normal((9, 2)))
+    eng = PredictEngine(state, block_size=4)
+    m_ref, c_ref = bound_mod.predict(hyp, z, qu, xs, full_cov=True,
+                                     include_noise=True)
+    mean, cov = eng(xs, full_cov=True, include_noise=True)
+    np.testing.assert_allclose(np.asarray(cov), np.asarray(c_ref),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+
+
+def test_engine_rejects_bad_args(rng):
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    with pytest.raises(ValueError, match="kernel_backend"):
+        PredictEngine(state, kernel_backend="cuda")
+    with pytest.raises(ValueError, match="block_size"):
+        PredictEngine(state, block_size=0)
+
+
+# -- fused Pallas predict kernel (interpret mode off-TPU) -------------------
+
+@pytest.mark.parametrize("t,m,q,d", [
+    (64, 16, 2, 1),     # exact tile fit after padding
+    (100, 37, 3, 2),    # nothing divides anything
+    (33, 130, 9, 5),    # m > block_m, q padded
+])
+def test_predict_kernel_vs_ref(rng, t, m, q, d):
+    hyp = _hyp(rng, q)
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    a_mean = jnp.asarray(rng.standard_normal((m, d)))
+    g = rng.standard_normal((m, m))
+    g = jnp.asarray(g + g.T)                       # symmetric like the real g
+    x = jnp.asarray(rng.standard_normal((t, q)))
+    mean, quad = p_ops.predict_stats(hyp, z, a_mean, g, x,
+                                     block_t=32, block_m=16)
+    m_ref, q_ref = p_ref.predict_ref(hyp["log_sf2"], hyp["log_ell"],
+                                     z, a_mean, g, x)
+    # Interpret mode runs the caller's f64 — machine-precision agreement.
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(quad), np.asarray(q_ref),
+                               rtol=1e-12, atol=1e-14)
+
+
+def test_pallas_engine_parity(rng):
+    """kernel_backend="pallas" block engine == bound.predict (interpret f64)."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    qu = bound_mod.optimal_qu(hyp, z, stats)
+    xs = jnp.asarray(rng.standard_normal((53, 2)))
+    eng = PredictEngine(state, block_size=16, kernel_backend="pallas")
+    mean, var = eng.predict(xs, include_noise=True)
+    m_ref, v_ref = bound_mod.predict(hyp, z, qu, xs, include_noise=True)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                               rtol=1e-8, atol=1e-10)
+
+
+# -- persistence ------------------------------------------------------------
+
+def test_save_load_roundtrip(rng, tmp_path):
+    """A server restarts from disk alone: the loaded state is leaf-for-leaf
+    identical and predicts identically — no model, no training data."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    save_state(tmp_path / "pstate", state, metadata={"run": "test"})
+    loaded, md = load_state(tmp_path / "pstate")
+    assert md["run"] == "test" and md["m"] == state.m and md["d"] == state.d
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    xs = jnp.asarray(rng.standard_normal((17, 2)))
+    m0, v0 = PredictEngine(state, block_size=8).predict(xs)
+    m1, v1 = PredictEngine(loaded, block_size=8).predict(xs)
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    # User metadata may not shadow the restore-template keys.
+    with pytest.raises(ValueError, match="reserved"):
+        save_state(tmp_path / "bad", state, metadata={"d": "note"})
+
+
+# -- the model wrappers delegate (and cache) --------------------------------
+
+def test_sgpr_predict_caches_and_invalidates(rng):
+    x, y = make_regression(rng, n=60, q=2, d=2)
+    model = SGPR(x, y, num_inducing=8, seed=0)
+    xs = x[:11]
+    qu = model.qu()
+    m_ref, v_ref = bound_mod.predict(model.params["hyp"], model.params["z"],
+                                     qu, jnp.asarray(xs), include_noise=True)
+    mean, var = model.predict(xs, include_noise=True)
+    np.testing.assert_allclose(mean, np.asarray(m_ref), rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(var, np.asarray(v_ref), rtol=1e-8, atol=1e-10)
+    # The factor solves are cached, not redone per request...
+    st1 = model.predictive_state()
+    model.predict(xs)
+    assert model.predictive_state() is st1
+    assert model._engine_cache is not None
+    # ...and a fit invalidates them.
+    model.fit(max_iters=1)
+    assert model._pstate_cache is None and model._engine_cache is None
+    mean2, _ = model.predict(xs)
+    assert model._pstate_cache is not None
+    assert not np.allclose(mean2, mean)   # params moved, posterior moved
+
+
+def test_sgpr_serve_engine_inherits_backend(rng):
+    """A pallas-trained model serves through the pallas predict kernel by
+    default (mirroring DistributedGP.predict_engine), and still matches."""
+    x, y = make_regression(rng, n=40, q=2, d=1)
+    fused = SGPR(x, y, num_inducing=6, seed=0, chunk_size=16,
+                 kernel_backend="pallas")
+    eng = fused.serve_engine(block_size=8)
+    assert eng.kernel_backend == "pallas"
+    assert fused.serve_engine(kernel_backend="xla").kernel_backend == "xla"
+    xla = SGPR(x, y, num_inducing=6, seed=0)
+    m0, v0 = xla.predict(x[:7])
+    m1, v1 = fused.predict(x[:7])
+    np.testing.assert_allclose(m1, m0, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(v1, v0, rtol=1e-8, atol=1e-10)
+
+
+def test_engine_donate_preserves_caller_buffer(rng):
+    """donate=True may only eat engine-owned buffers — a caller's jnp array
+    that needs no pad/cast must survive the call."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    eng = PredictEngine(state, block_size=8, donate=True)
+    xs = jnp.asarray(rng.standard_normal((16, 2)))   # exact block multiple
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")              # CPU can't honour donation
+        m0, v0 = eng.predict(xs)
+        m1, v1 = eng.predict(xs)                     # xs must still be alive
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+def test_sgpr_predict_full_cov_wrapper(rng):
+    x, y = make_regression(rng, n=50, q=2, d=1)
+    model = SGPR(x, y, num_inducing=7, seed=0)
+    mean, cov = model.predict(x[:6], full_cov=True)
+    m_ref, c_ref = bound_mod.predict(model.params["hyp"], model.params["z"],
+                                     model.qu(), jnp.asarray(x[:6]),
+                                     full_cov=True)
+    assert cov.shape == (6, 6)
+    np.testing.assert_allclose(cov, np.asarray(c_ref), rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(mean, np.asarray(m_ref), rtol=1e-9, atol=1e-11)
+
+
+def test_gplvm_state_and_reconstruct(rng):
+    _, y = make_regression(rng, n=50, q=2, d=4)
+    lv = BayesianGPLVM(y, q=2, num_inducing=6, seed=0)
+    state = lv.predictive_state()
+    assert lv.predictive_state() is state          # cached
+    qu = lv.qu()
+    mu = jnp.asarray(lv.params["mu"][:9])
+    m_ref, v_ref = bound_mod.predict(lv.params["hyp"], lv.params["z"], qu, mu)
+    mean, var = predict_mean_var(state, mu)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                               rtol=1e-8, atol=1e-10)
+    lv.fit(max_iters=1)
+    assert lv._pstate_cache is None                # invalidated by the fit
+    rec = lv.reconstruct(y[:3], observed=np.ones(4, bool), iters=3)
+    assert rec.shape == (3, 4) and np.isfinite(rec).all()
+
+
+def test_state_from_model_matches_manual_extraction(rng):
+    x, y = make_regression(rng, n=40, q=2, d=2)
+    model = SGPR(x, y, num_inducing=6, seed=0, chunk_size=16)
+    state = state_from_model(model)
+    manual = extract_state(model.params["hyp"], model.params["z"],
+                           model._stats(), jitter=model.jitter)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(manual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
