@@ -22,6 +22,7 @@ ALL = {
     "regmap": streaming.reg_map_backends,
     "svi": streaming.svi_map,
     "predict": serving.predict_serving,
+    "serve_ext": serving.serving_extensions,
 }
 
 FAST_ARGS = {
@@ -40,6 +41,8 @@ FAST_ARGS = {
                 n_mults=(1, 2)),
     "predict": dict(n=4096, m_sweep=(16, 32), t_sweep=(64, 256, 1024),
                     block=128, iters=2),
+    "serve_ext": dict(n=4096, m=32, t=256, block=64, s_sweep=(1, 8, 32),
+                      n_models_sweep=(1, 2, 4), iters=2),
 }
 
 

@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core import bound as bound_mod
 from repro.core.stats import partial_stats
-from repro.serve import PredictEngine, extract_state
+from repro.serve import (MultiPredictEngine, PredictEngine, extract_state,
+                         stack_states)
 
 from .gp_common import default_hyp
 
@@ -120,4 +121,78 @@ def predict_serving(n=20_000, q=3, d=2, m_sweep=(32, 64, 128),
                          f"qps={t / dt:.0f}"))
             print(f"  [{backend}] m={m} t={t:>6}: {dt * 1e3:8.2f} ms/batch  "
                   f"{t / dt:10.0f} q/s")
+    return rows
+
+
+def serving_extensions(n=20_000, q=3, d=2, m=64, t=1024, block=256,
+                       s_sweep=(1, 8, 32, 128),
+                       dtypes=("float64", "float32", "float16", "bfloat16"),
+                       n_models_sweep=(1, 2, 4, 8), iters=5):
+    """The PR-5 serving surface: posterior sampling throughput vs S, state
+    bytes / accuracy / qps vs storage dtype (the quantization trade-off
+    table in docs/serving.md), and ensemble qps vs fleet size through the
+    one-executable MultiPredictEngine vs N separate engines."""
+    rng = np.random.default_rng(5)
+    rows = []
+    hyp, z, stats = _fit_state(rng, n, m, q, d)
+    state = extract_state(hyp, z, stats)
+    xs = jnp.asarray(rng.standard_normal((t, q)))
+    import jax.random as jrandom
+
+    # -- posterior sampling: draws/sec vs number of samples S ---------------
+    eng = PredictEngine(state, block_size=block)
+    mean_ref, var_ref = eng.predict(xs)   # also warms the predict program
+    key = jrandom.PRNGKey(0)
+    for s_n in s_sweep:
+        smp = eng.sample(xs, s_n, key)                    # compile
+        # sanity: empirical mean within a loose MC bound of the posterior
+        err = float(jnp.max(jnp.abs(smp.mean(0) - mean_ref)))
+        bound = 8.0 * float(jnp.max(jnp.sqrt(var_ref))) / max(s_n, 2) ** 0.5
+        assert err < bound, f"S={s_n}: sample mean off ({err:.3f}>{bound:.3f})"
+        dt_s = _median_time(lambda: eng.sample(xs, s_n, key), iters)
+        rows.append((f"serve_ext/sample_S={s_n}_t={t}", dt_s * 1e6,
+                     f"draws_per_s={s_n * t / dt_s:.0f}"))
+        print(f"  sample S={s_n:4d} t={t}: {dt_s * 1e3:8.2f} ms/batch  "
+              f"{s_n * t / dt_s:12.0f} f-draws/s")
+
+    # -- quantized states: bytes vs accuracy vs qps -------------------------
+    m64, v64 = (jnp.asarray(a, jnp.float64) for a in (mean_ref, var_ref))
+    scale = float(jnp.std(m64))
+    for dname in dtypes:
+        qstate = state.astype(dname)
+        qeng = PredictEngine(qstate, block_size=block)
+        mq, vq = qeng.predict(xs)                         # compile + parity
+        rmse = float(jnp.sqrt(jnp.mean(
+            (mq.astype(jnp.float64) - m64) ** 2))) / scale
+        var_rmse = float(jnp.sqrt(jnp.mean(
+            (vq.astype(jnp.float64) - v64) ** 2)))
+        dt_q = _median_time(lambda: qeng.predict(xs), iters)
+        rows.append((f"serve_ext/dtype_{dname}", dt_q * 1e6,
+                     f"state_bytes={qstate.nbytes};rel_rmse={rmse:.2e};"
+                     f"var_rmse={var_rmse:.2e};qps={t / dt_q:.0f}"))
+        print(f"  dtype {dname:>8}: {qstate.nbytes / 1024:8.1f} KiB  "
+              f"rel_rmse={rmse:.2e}  var_rmse={var_rmse:.2e}  "
+              f"{t / dt_q:10.0f} q/s (compute {qeng.compute_dtype})")
+
+    # -- multi-model engine: one executable vs N separate engines -----------
+    for n_models in n_models_sweep:
+        fleet = [extract_state(
+            {k: (v + 0.01 * i if k == "log_sf2" else v)
+             for k, v in hyp.items()}, z, stats) for i in range(n_models)]
+        meng = MultiPredictEngine(stack_states(fleet), block_size=block)
+        mm, _ = meng.predict(xs)                          # compile
+        np.testing.assert_allclose(np.asarray(mm[0]), np.asarray(m64),
+                                   rtol=1e-8, atol=1e-10)
+        dt_m = _median_time(lambda: meng.predict(xs), iters)
+        singles = [PredictEngine(s, block_size=block) for s in fleet]
+        for s_eng in singles:
+            s_eng.predict(xs)                             # compile each
+        dt_n = _median_time(
+            lambda: [s_eng.predict(xs) for s_eng in singles], iters)
+        rows.append((f"serve_ext/ensemble_N={n_models}", dt_m * 1e6,
+                     f"qps={t / dt_m:.0f};speedup_vs_{n_models}_engines="
+                     f"{dt_n / dt_m:.2f}x"))
+        print(f"  ensemble N={n_models}: vmap {dt_m * 1e3:8.2f} ms  "
+              f"{n_models} engines {dt_n * 1e3:8.2f} ms  "
+              f"({dt_n / dt_m:4.2f}x)")
     return rows

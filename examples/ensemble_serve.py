@@ -1,0 +1,85 @@
+"""Serving an ensemble: N models, one executable; quantized wire states;
+posterior samples.
+
+The PR-5 serving surface end-to-end: fit a small fleet of SGPRs (bootstrap
+resamples of one dataset), extract each model's constant-size
+``PredictiveState``, quantize them to bf16 for shipping (the state is the
+ONLY artifact a server needs), restore from disk, stack the fleet into one
+batched pytree and serve every model per query through a single vmap-ed
+block-scan executable — then draw posterior function samples from one of
+the models.  See docs/serving.md.
+
+  PYTHONPATH=src python examples/ensemble_serve.py
+"""
+import tempfile
+
+import numpy as np
+
+import jax
+
+from repro.core import SGPR
+from repro.serve import (MultiPredictEngine, PredictEngine, load_state,
+                         save_state, stack_states)
+
+N_MODELS = 3
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 400
+    x = rng.uniform(-3, 3, size=(n, 1))
+    true_f = lambda t: np.sin(2.0 * t) + 0.3 * np.cos(5.0 * t)  # noqa: E731
+    y = true_f(x) + 0.1 * rng.standard_normal((n, 1))
+
+    # -- training side: a bootstrap fleet, quantized for the wire -----------
+    ckpt_dir = tempfile.mkdtemp(prefix="ensemble_serve_")
+    for k in range(N_MODELS):
+        idx = rng.choice(n, n, replace=True)            # bootstrap resample
+        model = SGPR(x[idx], y[idx], num_inducing=20, seed=k)
+        model.fit(max_iters=60)
+        state16 = model.predictive_state().astype("bfloat16")
+        save_state(f"{ckpt_dir}/model_{k}", state16, metadata={"member": k})
+        if k == 0:
+            # Sampling re-factorises query covariances, which sub-f32
+            # storage rounding can make indefinite — so the member we
+            # intend to draw functions from also ships a sampling-grade
+            # f32 state (still half the f64 bytes).
+            save_state(f"{ckpt_dir}/model_0_f32",
+                       model.predictive_state().astype("float32"))
+        print(f"member {k}: bound={model.log_bound():9.2f}  "
+              f"state={state16.nbytes / 1024:.1f} KiB (bf16 wire format)")
+
+    # -- serving side: restore the fleet, serve it from ONE executable ------
+    fleet = [load_state(f"{ckpt_dir}/model_{k}")[0] for k in range(N_MODELS)]
+    engine = MultiPredictEngine(stack_states(fleet), block_size=128)
+    print(f"fleet engine: {engine.n_models} models, storage "
+          f"{engine.state.z.dtype}, compute {engine.compute_dtype}")
+
+    xs = np.linspace(-3, 3, 500)[:, None]
+    mean, var = engine.predict(xs, include_noise=False)   # (N, t, d), (N, t)
+    mu, v = engine.predict_mixture(xs)                    # ensemble moments
+    rmse = float(np.sqrt(np.mean((np.asarray(mu) - true_f(xs)) ** 2)))
+    print(f"ensemble of {N_MODELS} over {xs.shape[0]} queries: mixture RMSE "
+          f"vs noiseless truth {rmse:.4f}")
+    assert rmse < 0.2, "ensemble serving degraded"
+    spread = float(np.mean(np.asarray(mean).std(axis=0)))
+    print(f"between-member spread (mean over queries): {spread:.4f}")
+    assert np.isfinite(np.asarray(v)).all() and (np.asarray(v) > 0).all()
+
+    # -- posterior samples from member 0's sampling-grade f32 state ---------
+    state0, _ = load_state(f"{ckpt_dir}/model_0_f32")
+    eng0 = PredictEngine(state0, block_size=128)
+    draws = eng0.sample(xs, 64, jax.random.PRNGKey(0))
+    emp = np.asarray(draws).mean(axis=0)
+    m0, v0 = (np.asarray(a) for a in eng0.predict(xs))
+    # Monte-Carlo sanity: 6 standard errors of the 64-draw mean estimator.
+    gap = float(np.max(np.abs(emp - m0)))
+    bound = 6.0 * float(np.sqrt(v0.max() / draws.shape[0]))
+    print(f"64 posterior draws from member 0: max |sample mean - posterior "
+          f"mean| = {gap:.3f} (MC bound {bound:.3f})")
+    assert gap < bound, "posterior samples drifted from the posterior mean"
+    print("ensemble served, sampled, and sanity-checked — OK")
+
+
+if __name__ == "__main__":
+    main()

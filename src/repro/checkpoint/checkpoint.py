@@ -18,7 +18,14 @@ import threading
 from typing import Any
 
 import jax
+import ml_dtypes
 import numpy as np
+
+# npz cannot round-trip ml_dtypes extension types (they reload as raw void
+# bytes): store them bit-identically under a same-width integer view and
+# restore via the template's dtype.  bfloat16 is the only one we ship
+# (quantized serving states — see serve.posterior.PredictiveState.astype).
+_BF16 = np.dtype(ml_dtypes.bfloat16)
 
 
 def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
@@ -26,7 +33,10 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        flat[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        if arr.dtype == _BF16:
+            arr = arr.view(np.uint16)
+        flat[key] = arr
     return flat
 
 
@@ -66,10 +76,6 @@ def restore(path: str | pathlib.Path, like) -> tuple[Any, dict]:
     path = pathlib.Path(path)
     data = np.load(path.with_suffix(".npz"))
     meta = json.loads(path.with_suffix(".json").read_text())
-    flat_like = _flatten_with_paths(jax.tree.map(
-        lambda x: np.zeros((), np.float32) if x is None else x, like)) \
-        if like is not None else None
-
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in paths:
@@ -77,6 +83,8 @@ def restore(path: str | pathlib.Path, like) -> tuple[Any, dict]:
                        for q in p)
         arr = data[key]
         want = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else arr.dtype
+        if want == _BF16 and arr.dtype == np.uint16:
+            arr = arr.view(_BF16)   # bit-identical bf16 round-trip
         leaves.append(arr.astype(want, copy=False))
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["metadata"]
 

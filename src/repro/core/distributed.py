@@ -374,3 +374,17 @@ class DistributedGP:
             data_axes=self.data_axes,
             kernel_backend=kernel_backend or self.kernel_backend,
             donate=donate)
+
+    def multi_predict_engine(self, states, block_size: int = 256,
+                             donate: bool = False, compute_dtype=None):
+        """A ``serve.MultiPredictEngine`` serving N stacked states (an
+        ensemble or A/B fleet) over this engine's mesh from one compiled
+        executable: queries shard across the data axes, the stacked state
+        is replicated, and — like ``predict_engine`` — predictions are
+        row-local with zero collectives."""
+        from ..serve import MultiPredictEngine
+
+        return MultiPredictEngine(
+            states, block_size=block_size, mesh=self.mesh,
+            data_axes=self.data_axes, donate=donate,
+            compute_dtype=compute_dtype)

@@ -198,3 +198,20 @@ class SGPR:
                                  include_noise=include_noise,
                                  full_cov=full_cov)
         return tuple(np.asarray(o) for o in out)
+
+    def sample(self, xstar: np.ndarray, num_samples: int,
+               key=None, seed: int = 0, include_noise: bool = False):
+        """Posterior function draws at ``xstar``: (num_samples, t, d).
+
+        Delegates to the cached ``serve.PredictEngine.sample`` — joint
+        within each query block (block size of the cached engine),
+        independent across blocks.  Pass a ``jax.random`` key for explicit
+        control, or a ``seed`` for convenience."""
+        if self._engine_cache is None:
+            self._engine_cache = self.serve_engine()
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        smp = self._engine_cache.sample(jnp.asarray(xstar, jnp.float64),
+                                        num_samples, key,
+                                        include_noise=include_noise)
+        return np.asarray(smp)

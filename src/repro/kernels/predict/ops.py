@@ -29,18 +29,32 @@ from .._common import pad_to as _pad_to
 from . import kernel as _k
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_m", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_t", "block_m", "interpret",
+                                             "compute_dtype"))
 def predict_stats(hyp: dict, z, a_mean, g, x, block_t: int = 128,
-                  block_m: int = 64, interpret: bool | None = None):
+                  block_m: int = 64, interpret: bool | None = None,
+                  compute_dtype=None):
     """Fused serving statistics via the Pallas kernel.
 
     Returns ``(mean, quad)``: ``ksm @ a_mean`` (t, d) and
     ``rowsum((ksm @ g) * ksm)`` (t,) — without materialising ``ksm`` in HBM.
+
+    ``compute_dtype`` pins the tile dtype (the serving engines pass their
+    accumulation width so quantized bf16/f16 states run f32 tiles rather
+    than half-precision arithmetic); ``None`` keeps the historical default.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     t, d = x.shape[0], a_mean.shape[1]
-    # f32 on the MXU; caller dtype (f64 in this repo) under interpret.
-    dt = x.dtype if interpret else jnp.float32
+    if compute_dtype is not None:
+        # Caller-pinned width, clamped to what the backend runs: sub-f32
+        # never reaches the tiles, and on TPU (non-interpret) the MXU
+        # precision contract stays f32 even for an f64 request.
+        dt = jnp.dtype(compute_dtype)
+        if dt.itemsize < 4 or (not interpret and dt.itemsize > 4):
+            dt = jnp.dtype(jnp.float32)
+    else:
+        # f32 on the MXU; caller dtype (f64 in this repo) under interpret.
+        dt = x.dtype if interpret else jnp.float32
     inv_ell2 = jnp.exp(-2.0 * hyp["log_ell"]).astype(dt)[None, :]   # (1, q)
     sf2 = jnp.exp(hyp["log_sf2"]).astype(dt)[None, None]            # (1, 1)
 
@@ -57,12 +71,20 @@ def predict_stats(hyp: dict, z, a_mean, g, x, block_t: int = 128,
     return mean[:t, :d], quad[:t, 0]
 
 
-def predict_fn_for_engine(block_t: int = 128, block_m: int = 64):
-    """Adapter matching serve.engine's per-block fn: (state, x) -> (mean, var)."""
+def predict_fn_for_engine(block_t: int = 128, block_m: int = 64,
+                          compute_dtype=None):
+    """Adapter matching serve.engine's per-block fn: (state, x) -> (mean, var).
+
+    ``compute_dtype`` threads the engine's accumulation width into the tile
+    dtype (see :func:`predict_stats`); outputs are returned in the query
+    dtype either way.
+    """
+    cdt = None if compute_dtype is None else jnp.dtype(compute_dtype)
 
     def fn(state, x):
         mean, quad = predict_stats(state.hyp, state.z, state.a_mean, state.g,
-                                   x, block_t=block_t, block_m=block_m)
+                                   x, block_t=block_t, block_m=block_m,
+                                   compute_dtype=cdt)
         var = gpk.ard_kdiag(state.hyp, x) - quad
         return mean.astype(x.dtype), var.astype(x.dtype)
 

@@ -1,22 +1,30 @@
 """Posterior serving subsystem: training state -> frozen predictive state ->
-batched/sharded low-latency predict engine.
+batched/sharded low-latency predict, sample, and multi-model engines.
 
-  posterior   PredictiveState (frozen pytree of query-independent factors),
-              extract_state, save_state/load_state (checkpoint layer),
-              predict_mean_var / predict_full_cov (the XLA query math)
-  engine      PredictEngine: jitted fixed-block lax.scan predict, optional
-              mesh sharding, xla|pallas backend, include_noise/full_cov
+  posterior   PredictiveState (frozen pytree of query-independent factors;
+              ``astype`` quantizes it — the wire format shipped to servers),
+              extract_state, save_state/load_state (checkpoint layer, dtype-
+              tagged sidecar), predict_mean_var / predict_full_cov (the XLA
+              query math), sample_block / sample_joint (jittered-chol draws)
+  engine      PredictEngine: jitted fixed-block lax.scan predict + posterior
+              ``sample`` (per-block joint draws, per-block PRNG keys riding
+              with the query shards), optional mesh sharding, xla|pallas
+              backend, configurable compute_dtype, include_noise/full_cov;
+              MultiPredictEngine: N stacked states vmap-served from one
+              executable (stack_states, mixture_moments)
 
-See docs/serving.md for the serving guide and tuning table.
+See docs/serving.md for the serving guide and tuning tables.
 """
 from . import engine, posterior
-from .engine import PredictEngine
+from .engine import (MultiPredictEngine, PredictEngine, mixture_moments,
+                     stack_states)
 from .posterior import (PredictiveState, extract_state, load_state,
-                        predict_full_cov, predict_mean_var, save_state,
-                        state_from_model)
+                        predict_full_cov, predict_mean_var, sample_block,
+                        sample_joint, save_state, state_from_model)
 
 __all__ = [
-    "engine", "posterior", "PredictEngine", "PredictiveState",
-    "extract_state", "load_state", "predict_full_cov", "predict_mean_var",
-    "save_state", "state_from_model",
+    "engine", "posterior", "PredictEngine", "MultiPredictEngine",
+    "PredictiveState", "extract_state", "load_state", "mixture_moments",
+    "predict_full_cov", "predict_mean_var", "sample_block", "sample_joint",
+    "save_state", "stack_states", "state_from_model",
 ]

@@ -1,8 +1,8 @@
-"""Batched, sharded, low-latency predict engine over a PredictiveState.
+"""Batched, sharded, low-latency predict/sample engines over PredictiveStates.
 
 Serving shape of the problem: a stream of query batches of varying size
-against one frozen :class:`~repro.serve.posterior.PredictiveState`.  The
-engine turns that into a shape-static jitted program:
+against one (or N) frozen :class:`~repro.serve.posterior.PredictiveState`.
+The engines turn that into shape-static jitted programs:
 
   * **Fixed-size query blocks** — queries are padded up to a multiple of
     ``block_size`` (times ``n_shards`` on a mesh), mirroring
@@ -14,17 +14,32 @@ engine turns that into a shape-static jitted program:
     of the batch size.
   * **Optional mesh sharding** — with ``mesh=``, query blocks shard across
     the data axes while the state is replicated (``shard_map``); each device
-    scans its own slice and no collective is needed (predictions are
-    row-local, the serving analogue of the paper's zero-communication map).
+    scans its own slice and no collective is needed (predictions — and
+    posterior samples, whose per-block PRNG keys ride along with the query
+    shards — are row-local, the serving analogue of the paper's
+    zero-communication map).
   * **Backend switch** — ``kernel_backend="pallas"`` routes each block
     through the fused ``kernels/predict`` op (ksm evaluated tile-by-tile in
     VMEM, mean/var contractions fused in the same pass); ``"xla"`` (default)
     runs the same math as two matmuls.
+  * **Quantized states** — a low-precision state (``state.astype(bf16)``,
+    the wire format shipped to servers) is upcast **once** at engine build
+    to ``compute_dtype`` (f32 by default for sub-f32 states), so every
+    contraction accumulates at full width and the only accuracy loss is the
+    storage rounding.
 
 The per-query hot path contains no factorizations and no triangular solves
-— those happened once at ``extract_state`` time.  ``include_noise`` adds
-``1/beta`` outside the jitted program (one vector add), so both variants
-share one compiled executable.
+— those happened once at ``extract_state`` time.  (``sample`` is the one
+exception: it re-factorises each block's (block, block) predictive
+covariance, which is query-dependent and cannot be precomputed.)
+``include_noise`` adds ``1/beta`` outside the jitted program (one vector
+add), so both variants share one compiled executable.
+
+:class:`MultiPredictEngine` serves N same-shape states (an ensemble or an
+A/B fleet) from ONE compiled executable by stacking them into a single
+batched pytree (:func:`stack_states`) and ``vmap``-ing the block scan over
+the model axis — the forward-path specialisation Dai et al. (2014) exploit
+for GPU-accelerated GP prediction.
 """
 from __future__ import annotations
 
@@ -35,33 +50,74 @@ from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..core.bound import DEFAULT_JITTER
 from ..core.distributed import num_shards, shard_map
 from . import posterior
 
 Array = jax.Array
 
 
+def _resolve_compute_dtype(state_dtype, compute_dtype):
+    """Engine compute width: explicit > state's own (f32/f64) > f32 floor.
+
+    Sub-f32 states (bf16/f16) are a *storage* format — computing in them
+    would add half-precision arithmetic error on top of the storage
+    rounding, so they default to f32 accumulation.
+    """
+    if compute_dtype is not None:
+        return jnp.dtype(compute_dtype)
+    sdt = jnp.dtype(state_dtype)
+    return sdt if sdt.itemsize >= 4 else jnp.dtype(jnp.float32)
+
+
+def _make_scan_blocks(block_fn, block_size: int):
+    """(state, (t_local, q)) -> block-scan -> ((t_local, d), (t_local,))."""
+
+    def scan_blocks(st, xq):
+        t_local = xq.shape[0]
+        nb = t_local // block_size
+        xb = xq.reshape(nb, block_size, xq.shape[1])
+
+        def body(carry, x_blk):
+            return carry, block_fn(st, x_blk)
+
+        _, (mean, var) = lax.scan(body, None, xb)
+        return mean.reshape(t_local, -1), var.reshape(t_local)
+
+    return scan_blocks
+
+
 class PredictEngine:
-    """Jitted block-scan (optionally mesh-sharded) predict over a frozen state.
+    """Jitted block-scan (optionally mesh-sharded) predict/sample engine.
 
     Args:
-      state: a :class:`~repro.serve.posterior.PredictiveState`.
+      state: a :class:`~repro.serve.posterior.PredictiveState` (any float
+        dtype — quantized states are upcast once to ``compute_dtype``).
       block_size: rows per scan block. Queries are padded up to a multiple
         of ``n_shards * block_size``; smaller blocks mean less padding waste
         on small batches, larger blocks amortise scan overhead on big ones
-        (tuning table in docs/serving.md).
+        (tuning table in docs/serving.md).  ``sample`` draws *jointly*
+        within each block and independently across blocks, so it is also
+        the correlation length of the sampled functions.
       mesh / data_axes: if given, shard query batches across these mesh axes
         with the state replicated on every device.
       kernel_backend: "xla" (default) or "pallas" (the fused
         ``kernels/predict`` op; forward-only — serving never differentiates).
-      donate: donate the padded query buffer to the jitted program
+      donate: donate the padded query buffer to the jitted predict program
         (``donate_argnums``) so XLA may reuse it for outputs. Off by default
         — some backends (CPU) cannot honour it and warn.
+      compute_dtype: dtype every contraction runs in.  ``None`` (default)
+        keeps f32/f64 states as-is and lifts bf16/f16 states to f32.
+        ``sample`` needs a Cholesky per block, so it requires f32+.
+      sample_jitter: diagonal jitter (scaled by sf2, the ``_chol_kmm``
+        convention) added to each block covariance before its Cholesky in
+        ``sample``.
     """
 
     def __init__(self, state: posterior.PredictiveState,
                  block_size: int = 256, mesh=None, data_axes=("data",),
-                 kernel_backend: str = "xla", donate: bool = False):
+                 kernel_backend: str = "xla", donate: bool = False,
+                 compute_dtype=None, sample_jitter: float = DEFAULT_JITTER):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if kernel_backend not in ("xla", "pallas"):
@@ -72,7 +128,10 @@ class PredictEngine:
         self.data_axes = tuple(data_axes)
         self.kernel_backend = kernel_backend
         self.donate = donate
+        self.sample_jitter = sample_jitter
         self.n_shards = 1 if mesh is None else num_shards(mesh, self.data_axes)
+        self.compute_dtype = _resolve_compute_dtype(state.z.dtype,
+                                                    compute_dtype)
 
         if kernel_backend == "pallas":
             from ..kernels.predict import predict_fn_for_engine
@@ -80,42 +139,36 @@ class PredictEngine:
             # zero-padded up to a larger tile inside the op (capped at 128 —
             # one MXU-rows worth — for big scan blocks; min sublane is 8).
             block_t = min(128, block_size + (-block_size) % 8)
-            self._block_fn = predict_fn_for_engine(block_t=block_t)
+            self._block_fn = predict_fn_for_engine(
+                block_t=block_t, compute_dtype=self.compute_dtype)
         else:
             self._block_fn = posterior.predict_mean_var
 
+        # The stored artifact stays as given (``.state``); all programs run
+        # on the compute-width copy, made once here.
+        self.state = state
+        cstate = (state if jnp.dtype(state.z.dtype) == self.compute_dtype
+                  else state.astype(self.compute_dtype))
         if mesh is not None:
             self._data_spec = P(self.data_axes)
             self._rep_spec = P()
-            state = jax.device_put(state, NamedSharding(mesh, self._rep_spec))
-        self.state = state
+            cstate = jax.device_put(cstate, NamedSharding(mesh, self._rep_spec))
+        self._cstate = cstate
 
-        def scan_blocks(st, xq):
-            # (t_local, q) -> block-scan -> ((t_local, d), (t_local,))
-            t_local = xq.shape[0]
-            nb = t_local // self.block_size
-            xb = xq.reshape(nb, self.block_size, xq.shape[1])
-
-            def body(carry, x_blk):
-                return carry, self._block_fn(st, x_blk)
-
-            _, (mean, var) = lax.scan(body, None, xb)
-            return mean.reshape(t_local, -1), var.reshape(t_local)
-
-        if mesh is None:
-            run = scan_blocks
-        else:
-            run = shard_map(scan_blocks, mesh=mesh,
+        run = _make_scan_blocks(self._block_fn, self.block_size)
+        if mesh is not None:
+            run = shard_map(run, mesh=mesh,
                             in_specs=(self._rep_spec, self._data_spec),
                             out_specs=(self._data_spec, self._data_spec))
         self._run = jax.jit(run, donate_argnums=(1,) if donate else ())
         self._run_full = jax.jit(posterior.predict_full_cov)
+        self._sample_progs: dict = {}   # (num_samples, include_noise) -> fn
 
     # -- the serving entry points -------------------------------------------
     def pad_queries(self, xstar) -> tuple[Array, int]:
         """Pad (t, q) queries up to a multiple of ``n_shards * block_size``
         with zero rows (mirroring ``pad_and_shard``); returns (padded, t)."""
-        xq = jnp.asarray(xstar, self.state.z.dtype)
+        xq = jnp.asarray(xstar, self.compute_dtype)
         t = xq.shape[0]
         mult = self.n_shards * self.block_size
         pad = (-t) % mult
@@ -130,24 +183,27 @@ class PredictEngine:
             xq = jax.device_put(xq, NamedSharding(self.mesh, self._data_spec))
         return xq, t
 
+    def _noise_var(self):
+        return jnp.exp(-self._cstate.hyp["log_beta"])
+
     def predict(self, xstar, include_noise: bool = False):
         """Batched diag-variance prediction: ``(mean (t, d), var (t,))``."""
         xq, t = self.pad_queries(xstar)
-        mean, var = self._run(self.state, xq)
+        mean, var = self._run(self._cstate, xq)
         mean, var = mean[:t], var[:t]
         if include_noise:
-            var = var + jnp.exp(-self.state.hyp["log_beta"])
+            var = var + self._noise_var()
         return mean, var
 
     def predict_full_cov(self, xstar, include_noise: bool = False):
         """Full-covariance mode: ``(mean (t, d), cov (t, t))``.  Computed in
         one piece (cross-covariances couple all query pairs) — the small-t
         mode; it bypasses the block scan and the mesh."""
-        xq = jnp.asarray(xstar, self.state.z.dtype)
-        mean, cov = self._run_full(self.state, xq)
+        xq = jnp.asarray(xstar, self.compute_dtype)
+        mean, cov = self._run_full(self._cstate, xq)
         if include_noise:
-            cov = cov + jnp.exp(-self.state.hyp["log_beta"]) * jnp.eye(
-                xq.shape[0], dtype=cov.dtype)
+            cov = cov + self._noise_var() * jnp.eye(xq.shape[0],
+                                                    dtype=cov.dtype)
         return mean, cov
 
     def __call__(self, xstar, include_noise: bool = False,
@@ -161,3 +217,205 @@ class PredictEngine:
         models' ``.predict`` delegates to."""
         mean, var = self.predict(xstar, include_noise=include_noise)
         return np.asarray(mean), np.asarray(var)
+
+    # -- posterior sampling -------------------------------------------------
+    def _sample_prog(self, num_samples: int, include_noise: bool):
+        """Compile (and cache) the block-scan sampling program for one
+        (num_samples, include_noise) pair — everything else is shared."""
+        cache_key = (num_samples, include_noise)
+        prog = self._sample_progs.get(cache_key)
+        if prog is not None:
+            return prog
+        bs, jit_ = self.block_size, self.sample_jitter
+
+        def scan_sample(st, xq, keys):
+            # (t_local, q), (nb_local, 2) -> (num_samples, t_local, d)
+            t_local = xq.shape[0]
+            nb = t_local // bs
+            xb = xq.reshape(nb, bs, xq.shape[1])
+
+            def body(carry, inp):
+                x_blk, k = inp
+                return carry, posterior.sample_block(
+                    st, x_blk, k, num_samples, jitter=jit_,
+                    include_noise=include_noise)
+
+            _, smp = lax.scan(body, None, (xb, keys))   # (nb, S, bs, d)
+            smp = jnp.swapaxes(smp, 0, 1)               # (S, nb, bs, d)
+            return smp.reshape(num_samples, t_local, -1)
+
+        if self.mesh is None:
+            run = scan_sample
+        else:
+            run = shard_map(
+                scan_sample, mesh=self.mesh,
+                in_specs=(self._rep_spec, self._data_spec, self._data_spec),
+                out_specs=P(None, self.data_axes))
+        prog = jax.jit(run)
+        self._sample_progs[cache_key] = prog
+        return prog
+
+    def sample(self, xstar, num_samples: int, key,
+               include_noise: bool = False) -> Array:
+        """Posterior function draws: ``(num_samples, t, d)``.
+
+        Samples are *jointly* distributed within each query block (drawn
+        from the block's full predictive covariance via a jittered
+        Cholesky) and independent across blocks — ``block_size`` is the
+        correlation length.  For exact joint draws over every query, keep
+        ``t <= block_size`` or use ``serve.posterior.sample_joint``.
+
+        Block i consumes ``fold_in(key, i)`` — a function of the *global*
+        block index only, not of the padded block count — and the keys ride
+        along with the query shards.  A mesh-sharded engine therefore draws
+        bit-identical samples to a single-device one (whose padding differs)
+        and needs no collective.  Same key, same queries → same samples;
+        distinct keys → independent draws.
+        """
+        if num_samples < 1:
+            raise ValueError(f"num_samples must be >= 1, got {num_samples}")
+        if self.compute_dtype.itemsize < 4:
+            raise ValueError(
+                "sample needs a Cholesky per block — build the engine with "
+                f"compute_dtype=f32/f64, not {self.compute_dtype}")
+        if jnp.dtype(self.state.z.dtype).itemsize < 4:
+            raise ValueError(
+                "sample re-factorises each block's predictive covariance, "
+                "and sub-f32 storage rounding (bf16/f16 quantization of g) "
+                "can make it indefinite beyond any reasonable jitter — "
+                "ship an f32/f64 PredictiveState for sampling; quantized "
+                "states serve mean/var only (docs/serving.md)")
+        xq, t = self.pad_queries(xstar)
+        key = jnp.asarray(key)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(xq.shape[0] // self.block_size))
+        if self.mesh is not None:
+            keys = jax.device_put(keys,
+                                  NamedSharding(self.mesh, self._data_spec))
+        prog = self._sample_prog(int(num_samples), bool(include_noise))
+        return prog(self._cstate, xq, keys)[:, :t, :]
+
+
+# -- multi-model serving ----------------------------------------------------
+
+def stack_states(states) -> posterior.PredictiveState:
+    """Stack N same-shape PredictiveStates into one batched pytree.
+
+    Every leaf gains a leading model axis of size N; the result is what
+    :class:`MultiPredictEngine` vmaps over.  States must agree on every
+    leaf's shape and dtype (same m, q, d, and storage width — ``astype``
+    first if the fleet is mixed-precision).
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("stack_states needs at least one PredictiveState")
+    ref_leaves = jax.tree.leaves(states[0])
+    for s in states[1:]:
+        for a, b in zip(ref_leaves, jax.tree.leaves(s)):
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise ValueError(
+                    "all PredictiveStates must share leaf shapes/dtypes to "
+                    f"stack: {a.shape}/{a.dtype} vs {b.shape}/{b.dtype}")
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+
+
+def mixture_moments(mean: Array, var: Array) -> tuple[Array, Array]:
+    """Ensemble (equal-weight mixture) moments from per-model predictions.
+
+    ``mean`` (N, t, d), ``var`` (N, t) -> (mean (t, d), var (t, d)): the
+    mixture variance is the mean within-model variance plus the spread of
+    the per-model means (per output dim).  Within-model variances are
+    clamped at 0 first — quantized (bf16/f16) states can round a
+    near-zero ``k** − quad`` slightly negative; a no-op at full precision.
+    """
+    mu = jnp.mean(mean, axis=0)
+    v = (jnp.mean(jnp.maximum(var, 0), axis=0)[:, None]
+         + jnp.var(mean, axis=0))
+    return mu, v
+
+
+class MultiPredictEngine:
+    """Serve N same-shape PredictiveStates from one compiled executable.
+
+    The states are stacked into a single batched pytree and the block scan
+    is ``vmap``-ed over the model axis, so an ensemble or an A/B fleet
+    shares one jitted program (and, on a mesh, one replicated state buffer)
+    instead of N engines with N executables.  Queries are answered by every
+    model at once: ``predict`` returns ``(mean (N, t, d), var (N, t))``.
+
+    Args:
+      states: a sequence of PredictiveStates (stacked here), or an
+        already-stacked state with a leading model axis (e.g. from
+        :func:`stack_states`, or a previous engine's ``.state``).
+      block_size / mesh / data_axes / donate / compute_dtype: as
+        :class:`PredictEngine` — queries shard over the mesh, the stacked
+        state is replicated, predictions stay row-local (no collective).
+
+    XLA-backend only: the fused Pallas predict op is per-model, and batching
+    the model axis into its grid is not in its tiling contract.
+    """
+
+    def __init__(self, states, block_size: int = 256, mesh=None,
+                 data_axes=("data",), kernel_backend: str = "xla",
+                 donate: bool = False, compute_dtype=None):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if kernel_backend != "xla":
+            raise ValueError(
+                "MultiPredictEngine is XLA-only (the fused Pallas predict "
+                f"kernel is per-model), got {kernel_backend!r}")
+        self.kernel_backend = kernel_backend
+        if isinstance(states, posterior.PredictiveState):
+            stacked = states
+        else:
+            stacked = stack_states(states)
+        if stacked.z.ndim != 3:
+            raise ValueError(
+                "expected a stacked state with a leading model axis, got "
+                f"z of shape {stacked.z.shape}")
+        self.n_models = stacked.z.shape[0]
+        self.block_size = block_size
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.donate = donate
+        self.n_shards = 1 if mesh is None else num_shards(mesh, self.data_axes)
+        self.compute_dtype = _resolve_compute_dtype(stacked.z.dtype,
+                                                    compute_dtype)
+
+        self.state = stacked
+        cstate = (stacked if jnp.dtype(stacked.z.dtype) == self.compute_dtype
+                  else stacked.astype(self.compute_dtype))
+        if mesh is not None:
+            self._data_spec = P(self.data_axes)
+            self._rep_spec = P()
+            cstate = jax.device_put(cstate, NamedSharding(mesh, self._rep_spec))
+        self._cstate = cstate
+
+        scan = _make_scan_blocks(posterior.predict_mean_var, self.block_size)
+        run = jax.vmap(scan, in_axes=(0, None))   # over the model axis
+        if mesh is not None:
+            out = P(None, self.data_axes)
+            run = shard_map(run, mesh=mesh,
+                            in_specs=(self._rep_spec, self._data_spec),
+                            out_specs=(out, out))
+        self._run = jax.jit(run, donate_argnums=(1,) if donate else ())
+
+    # `pad_queries` is identical to the single-model engine's.
+    pad_queries = PredictEngine.pad_queries
+
+    def predict(self, xstar, include_noise: bool = False):
+        """All models answer the batch: ``(mean (N, t, d), var (N, t))``."""
+        xq, t = self.pad_queries(xstar)
+        mean, var = self._run(self._cstate, xq)
+        mean, var = mean[:, :t], var[:, :t]
+        if include_noise:
+            var = var + jnp.exp(-self._cstate.hyp["log_beta"])[:, None]
+        return mean, var
+
+    def __call__(self, xstar, include_noise: bool = False):
+        return self.predict(xstar, include_noise=include_noise)
+
+    def predict_mixture(self, xstar, include_noise: bool = False):
+        """Equal-weight ensemble moments: ``(mean (t, d), var (t, d))``."""
+        mean, var = self.predict(xstar, include_noise=include_noise)
+        return mixture_moments(mean, var)

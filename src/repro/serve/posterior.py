@@ -76,6 +76,30 @@ class PredictiveState(NamedTuple):
     def d(self) -> int:
         return self.c2.shape[1]
 
+    @property
+    def dtype(self) -> jnp.dtype:
+        return self.z.dtype
+
+    def astype(self, dtype) -> "PredictiveState":
+        """Quantize (or widen) every leaf — hypers included — to ``dtype``.
+
+        The state is the only artifact shipped to servers, so its dtype is
+        the wire/disk format: ``state.astype(jnp.bfloat16)`` halves (vs f32)
+        or quarters (vs f64) the bytes.  Engines built on a low-precision
+        state upcast it once to their ``compute_dtype`` (f32 by default for
+        sub-f32 states), so the accuracy loss is the storage rounding, not
+        half-precision arithmetic — measured in ``benchmarks.run --only
+        serve_ext`` and budgeted in tests/test_serving_quant.py.
+        """
+        dtype = jnp.dtype(dtype)
+        return jax.tree.map(lambda a: jnp.asarray(a, dtype), self)
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes of the serialized state (what ships to a server)."""
+        return int(sum(a.size * a.dtype.itemsize
+                       for a in jax.tree.leaves(self)))
+
 
 @functools.partial(jax.jit, static_argnames=())
 def extract_state(hyp: dict, z: Array, stats: Stats,
@@ -141,6 +165,98 @@ def predict_full_cov(state: PredictiveState, xstar: Array):
     kss = gpk.ard_kernel(state.hyp, xstar, xstar)
     cov = kss - ksm @ state.g @ ksm.T
     return mean, cov
+
+
+# -- posterior sampling -----------------------------------------------------
+
+def _mean_cov_from_factors(state: PredictiveState, xstar: Array):
+    """Joint moments via the STORED CHOL FACTORS, not the ``g`` contraction.
+
+    cov = kss − a1ᵀa1 + a2ᵀa2 with a1 = L⁻¹ Km*, a2 = L_B⁻¹ a1 — the
+    ``core.bound.predict`` full-cov form.  Algebraically identical to
+    :func:`predict_full_cov`, but every intermediate stays O(kss) in
+    magnitude, whereas ``g = Kmm⁻¹ − Σ⁻¹`` has O(cond(Kmm)) entries whose
+    contraction cancels catastrophically — fine for a variance *diagonal*
+    read once, fatal for a matrix that must stay PSD enough to factor.
+    """
+    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)
+    mean = ksm @ state.a_mean
+    a1 = jsl.solve_triangular(state.chol_kmm, ksm.T, lower=True)
+    a2 = jsl.solve_triangular(state.chol_sigma, a1, lower=True)
+    kss = gpk.ard_kernel(state.hyp, xstar, xstar)
+    cov = kss - a1.T @ a1 + a2.T @ a2
+    return mean, cov
+
+
+def _jittered_chol(state: PredictiveState, cov: Array, t: int,
+                   jitter: float, include_noise: bool) -> Array:
+    """chol(cov + jitter·sf2·I [+ I/beta]) — the sampling factor.
+
+    The jitter follows the ``_chol_kmm`` convention (scaled by the signal
+    variance so it is unit-free).  It also makes the factor well-defined on
+    padded query blocks, where the duplicated x=0 pad rows make ``cov``
+    exactly singular.
+    """
+    sf2 = jnp.exp(state.hyp["log_sf2"])
+    diag = jitter * sf2 + jnp.asarray(1e-12, cov.dtype)
+    if include_noise:
+        diag = diag + jnp.exp(-state.hyp["log_beta"])
+    return jnp.linalg.cholesky(cov + diag * jnp.eye(t, dtype=cov.dtype))
+
+
+def sample_block(state: PredictiveState, x_blk: Array, key: Array,
+                 num_samples: int, jitter: float = DEFAULT_JITTER,
+                 include_noise: bool = False) -> Array:
+    """Joint posterior samples over one query block: (num_samples, t, d).
+
+    Draws f* ~ N(mean, cov) from the block's full predictive covariance via
+    a jittered Cholesky of the stored-factor form — the per-block body that
+    ``PredictEngine.sample`` scans.  Output dims share the covariance (the
+    SGPR predictive factorises over d), so one (t, t) factor serves all d
+    columns of standard-normal draws.
+
+    The moments and the factor are computed in f64 regardless of the
+    engine's compute dtype (draws are cast back): the covariance of nearby
+    queries is near-singular by nature, and the repo's global x64 policy
+    exists precisely because this Cholesky math is ill-conditioned in f32.
+
+    Because the factor is lower-triangular, sample row i depends only on
+    covariance rows 0..i — so the leading rows of a padded block are
+    *identical* to what an unpadded call would draw with the same key (pad
+    rows can never leak into real samples; property-tested in
+    tests/test_serving_sampling.py).
+    """
+    if jnp.dtype(state.z.dtype).itemsize < 4:
+        raise ValueError(
+            "sampling rebuilds the predictive covariance from the stored "
+            "chol factors, and sub-f32 storage rounding can make it "
+            "indefinite beyond any reasonable jitter (the Cholesky would "
+            "silently return NaN draws) — sample from an f32/f64 "
+            "PredictiveState; quantized states serve mean/var only "
+            "(docs/serving.md)")
+    out_dtype = x_blk.dtype
+    f64 = jnp.dtype(jnp.float64)
+    st = state if jnp.dtype(state.z.dtype) == f64 else state.astype(f64)
+    mean, cov = _mean_cov_from_factors(st, x_blk.astype(f64))
+    t = x_blk.shape[0]
+    lc = _jittered_chol(st, cov, t, jitter, include_noise)
+    eps = jax.random.normal(key, (num_samples, t, mean.shape[1]), dtype=f64)
+    return (mean[None] + jnp.einsum("ij,sjd->sid", lc, eps)).astype(out_dtype)
+
+
+def sample_joint(state: PredictiveState, xstar: Array, key: Array,
+                 num_samples: int, jitter: float = DEFAULT_JITTER,
+                 include_noise: bool = False) -> Array:
+    """One-piece joint samples over *all* queries: (num_samples, t, d).
+
+    The small-t analogue of :func:`predict_full_cov` — cross-covariances
+    couple every query pair, O(t²) memory and O(t³) factor.  For large
+    batches use ``PredictEngine.sample``, which draws jointly within each
+    fixed-size block and independently across blocks.
+    """
+    return sample_block(state, jnp.asarray(xstar, state.z.dtype), key,
+                        num_samples, jitter=jitter,
+                        include_noise=include_noise)
 
 
 # -- persistence (the existing checkpoint layer) ----------------------------

@@ -215,12 +215,68 @@ def main():
                                rtol=1e-8, atol=1e-10)
     # Identical results from the single-device engine over the same state.
     from repro.serve import PredictEngine
-    m_1dev, v_1dev = PredictEngine(state, block_size=4).predict(
-        xs, include_noise=True)
+    eng_1dev = PredictEngine(state, block_size=4)
+    m_1dev, v_1dev = eng_1dev.predict(xs, include_noise=True)
     np.testing.assert_allclose(np.asarray(mean_s), np.asarray(m_1dev),
                                rtol=1e-12, atol=1e-14)
     np.testing.assert_allclose(np.asarray(var_s), np.asarray(v_1dev),
                                rtol=1e-12, atol=1e-14)
+
+    # --- serving extensions: sharded sampling ------------------------------
+    # Per-block PRNG keys are fold_in(key, global_block_index) — a function
+    # of the block index alone, so the 8-shard engine (77 queries pad to 96)
+    # must draw BIT-IDENTICAL samples to the single-device engine (77 pad to
+    # 80): the layouts agree on every real block.
+    skey = jax.random.PRNGKey(5)
+    smp_sh = sengine.sample(xs, 3, skey, include_noise=True)
+    smp_1d = eng_1dev.sample(xs, 3, skey, include_noise=True)
+    assert smp_sh.shape == (3, t, d)
+    np.testing.assert_array_equal(np.asarray(smp_sh), np.asarray(smp_1d))
+    assert not np.array_equal(
+        np.asarray(smp_sh),
+        np.asarray(sengine.sample(xs, 3, jax.random.PRNGKey(6),
+                                  include_noise=True)))
+
+    # --- serving extensions: multi-model engine on the mesh ----------------
+    from repro.serve import MultiPredictEngine, extract_state as _extract
+    fleet = [state,
+             _extract({k2: v2 + 0.03 for k2, v2 in hyp.items()},
+                      jnp.asarray(z), st_seq),
+             _extract({k2: v2 - 0.05 for k2, v2 in hyp.items()},
+                      jnp.asarray(z), st_seq)]
+    meng = eng.multi_predict_engine(fleet, block_size=4)
+    assert meng.n_shards == 8 and meng.n_models == 3
+    mm_sh, vv_sh = meng.predict(xs, include_noise=True)
+    assert mm_sh.shape == (3, t, d) and vv_sh.shape == (3, t)
+    mm_1d, vv_1d = MultiPredictEngine(fleet, block_size=4).predict(
+        xs, include_noise=True)
+    np.testing.assert_allclose(np.asarray(mm_sh), np.asarray(mm_1d),
+                               rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(vv_sh), np.asarray(vv_1d),
+                               rtol=1e-12, atol=1e-14)
+    # Row 0 is the original model — must match the single-model engine.
+    np.testing.assert_allclose(np.asarray(mm_sh[0]), np.asarray(m_1dev),
+                               rtol=1e-12, atol=1e-14)
+
+    # --- serving extensions: the zero-collective property ------------------
+    # Predictions and samples are row-local; the sharded programs must
+    # contain NO psum (or any other collective reduction) — the serving
+    # analogue of the paper's zero-communication map step.
+    xq_p, _ = sengine.pad_queries(xs)
+    jaxpr_predict = str(jax.make_jaxpr(
+        lambda s_, x_: sengine._run(s_, x_))(sengine._cstate, xq_p))
+    keys_p = jax.vmap(lambda i: jax.random.fold_in(skey, i))(
+        jnp.arange(xq_p.shape[0] // 4))
+    prog = sengine._sample_prog(3, True)
+    jaxpr_sample = str(jax.make_jaxpr(
+        lambda s_, x_, k_: prog(s_, x_, k_))(sengine._cstate, xq_p, keys_p))
+    xq_m, _ = meng.pad_queries(xs)
+    jaxpr_multi = str(jax.make_jaxpr(
+        lambda s_, x_: meng._run(s_, x_))(meng._cstate, xq_m))
+    for name, jx in (("predict", jaxpr_predict), ("sample", jaxpr_sample),
+                     ("multi", jaxpr_multi)):
+        for coll in ("psum", "all_reduce", "all_gather", "all_to_all"):
+            assert coll not in jx, f"sharded {name} program contains {coll}"
 
     print("DIST-WORKER-OK")
 

@@ -1,0 +1,125 @@
+"""Multi-model serving: N stacked PredictiveStates, one executable.
+
+`stack_states` batches same-shape states into one pytree;
+`MultiPredictEngine` vmaps the block scan over the model axis.  The
+contract: every model's row of the stacked output equals what its own
+single-model engine would produce — the vmap is pure batching, not an
+approximation — and the mixture helper implements the equal-weight moment
+algebra exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import partial_stats
+from repro.serve import (MultiPredictEngine, PredictEngine, extract_state,
+                         mixture_moments, stack_states)
+
+
+def _fleet(rng, n_models=3, n=70, m=9, q=2, d=2):
+    """N states sharing shapes but not hypers/posteriors (an A/B fleet)."""
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    states = []
+    for k in range(n_models):
+        hyp = {"log_sf2": jnp.asarray(0.2 + 0.1 * k),
+               "log_ell": jnp.asarray(rng.uniform(-0.3, 0.3, q)),
+               "log_beta": jnp.asarray(1.0 + 0.2 * k)}
+        stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+        states.append(extract_state(hyp, z, stats))
+    return states
+
+
+def test_stack_states_shapes(rng):
+    states = _fleet(rng)
+    stacked = stack_states(states)
+    assert stacked.z.shape == (3, 9, 2)
+    assert stacked.g.shape == (3, 9, 9)
+    assert stacked.hyp["log_beta"].shape == (3,)
+    for k, s in enumerate(states):
+        np.testing.assert_array_equal(np.asarray(stacked.a_mean[k]),
+                                      np.asarray(s.a_mean))
+
+
+@pytest.mark.parametrize("t,block", [(1, 8), (23, 4), (16, 16)])
+def test_multi_engine_rows_equal_single_engines(rng, t, block):
+    """Stacked row k == model k's own engine, padding and noise included."""
+    states = _fleet(rng)
+    eng = MultiPredictEngine(states, block_size=block)
+    xs = jnp.asarray(rng.standard_normal((t, 2)))
+    for noise in (False, True):
+        mean, var = eng.predict(xs, include_noise=noise)
+        assert mean.shape == (3, t, 2) and var.shape == (3, t)
+        for k, s in enumerate(states):
+            m1, v1 = PredictEngine(s, block_size=block).predict(
+                xs, include_noise=noise)
+            np.testing.assert_allclose(np.asarray(mean[k]), np.asarray(m1),
+                                       rtol=1e-12, atol=1e-14)
+            np.testing.assert_allclose(np.asarray(var[k]), np.asarray(v1),
+                                       rtol=1e-12, atol=1e-14)
+
+
+def test_multi_engine_accepts_prestacked(rng):
+    """A stacked state (e.g. another engine's .state) builds directly."""
+    states = _fleet(rng)
+    stacked = stack_states(states)
+    eng = MultiPredictEngine(stacked, block_size=8)
+    assert eng.n_models == 3
+    xs = jnp.asarray(rng.standard_normal((5, 2)))
+    ref = MultiPredictEngine(states, block_size=8).predict(xs)
+    out = eng.predict(xs)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mixture_moments_algebra(rng):
+    """Equal-weight mixture: mean of means; mean var + spread of means."""
+    states = _fleet(rng)
+    eng = MultiPredictEngine(states, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((7, 2)))
+    mean, var = eng.predict(xs)
+    mu, v = mixture_moments(mean, var)
+    assert mu.shape == (7, 2) and v.shape == (7, 2)
+    np.testing.assert_allclose(np.asarray(mu),
+                               np.asarray(mean).mean(0), rtol=1e-12)
+    manual = (np.maximum(np.asarray(var), 0.0).mean(0)[:, None]
+              + np.asarray(mean).var(axis=0))
+    np.testing.assert_allclose(np.asarray(v), manual, rtol=1e-12)
+    mu2, v2 = eng.predict_mixture(xs)
+    np.testing.assert_array_equal(np.asarray(mu), np.asarray(mu2))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v2))
+    # Mixture variance can only exceed the mean within-model variance.
+    assert (np.asarray(v) >= np.asarray(var).mean(0)[:, None] - 1e-12).all()
+
+
+def test_multi_engine_quantized_fleet(rng):
+    """A bf16-stacked fleet serves through f32 accumulation and stays near
+    the f64 fleet."""
+    states = _fleet(rng)
+    xs = jnp.asarray(rng.standard_normal((9, 2)))
+    ref_mean, _ = MultiPredictEngine(states, block_size=8).predict(xs)
+    q = stack_states(states).astype(jnp.bfloat16)
+    eng = MultiPredictEngine(q, block_size=8)
+    assert eng.compute_dtype == jnp.float32
+    mean, var = eng.predict(xs)
+    assert mean.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(mean.astype(jnp.float64) - ref_mean))) < 0.5
+    assert bool(jnp.isfinite(var).all())
+
+
+def test_multi_engine_rejects_bad_inputs(rng):
+    states = _fleet(rng)
+    with pytest.raises(ValueError, match="at least one"):
+        stack_states([])
+    other = _fleet(rng, n_models=1, m=7)[0]    # different m
+    with pytest.raises(ValueError, match="share leaf shapes"):
+        stack_states([states[0], other])
+    with pytest.raises(ValueError, match="XLA-only"):
+        MultiPredictEngine(states, kernel_backend="pallas")
+    with pytest.raises(ValueError, match="model axis"):
+        MultiPredictEngine(states[0])          # unstacked single state
+    with pytest.raises(ValueError, match="block_size"):
+        MultiPredictEngine(states, block_size=0)

@@ -1,0 +1,123 @@
+"""Property-based tests for the serve layer (hypothesis).
+
+Random shapes and hypers: the block engine must equal the raw query math
+for ANY (t, block_size, m, d) combination — padding, tail blocks, single-row
+blocks and all; the diagonal of the full covariance must equal the
+diag-variance path; and quantizing the state must lose accuracy
+monotonically with the storage mantissa width.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.stats import partial_stats  # noqa: E402
+from repro.serve import (PredictEngine, extract_state,  # noqa: E402
+                         predict_mean_var)
+
+
+def _random_state(seed, m, d, q=2, n=30):
+    rng = np.random.default_rng(seed)
+    hyp = {"log_sf2": jnp.asarray(rng.uniform(-0.5, 0.8)),
+           "log_ell": jnp.asarray(rng.uniform(-0.4, 0.4, q)),
+           "log_beta": jnp.asarray(rng.uniform(0.5, 2.0))}
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return extract_state(hyp, z, stats), rng
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.integers(1, 33),
+    block=st.integers(1, 12),
+    m=st.integers(2, 10),
+    d=st.integers(1, 3),
+)
+def test_property_engine_equals_query_math(seed, t, block, m, d):
+    """For any shapes: padded block-scan predict == posterior.predict_mean_var."""
+    state, rng = _random_state(seed, m, d)
+    xs = jnp.asarray(rng.standard_normal((t, 2)))
+    eng = PredictEngine(state, block_size=block)
+    mean, var = eng.predict(xs)
+    m_ref, v_ref = predict_mean_var(state, xs)
+    assert mean.shape == (t, d) and var.shape == (t,)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                               rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                               rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 20))
+def test_property_full_cov_diag_equals_var(seed, t):
+    """diag(cov) from the full-cov path == the diag-variance path."""
+    state, rng = _random_state(seed, m=7, d=2)
+    xs = jnp.asarray(rng.standard_normal((t, 2)))
+    eng = PredictEngine(state, block_size=8)
+    _, var = eng.predict(xs)
+    _, cov = eng.predict_full_cov(xs)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(cov)),
+                               np.asarray(var), rtol=1e-8, atol=1e-10)
+    # and with noise folded in on both paths
+    _, var_n = eng.predict(xs, include_noise=True)
+    _, cov_n = eng.predict_full_cov(xs, include_noise=True)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(cov_n)),
+                               np.asarray(var_n), rtol=1e-8, atol=1e-10)
+
+
+def _quant_rmse(state, xs, mean64, var64, dtype):
+    eng = PredictEngine(state.astype(dtype), block_size=16)
+    mean, var = eng.predict(xs)
+    m_err = float(jnp.sqrt(jnp.mean(
+        (mean.astype(jnp.float64) - mean64) ** 2)))
+    v_err = float(jnp.sqrt(jnp.mean(
+        (var.astype(jnp.float64) - var64) ** 2)))
+    return m_err, v_err
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_quantization_error_monotone_in_mantissa(seed):
+    """For any problem: quantized-state error shrinks monotonically along
+    the storage-precision ladder.
+
+    The ladder is ordered by *mantissa bits* — what storage rounding is
+    made of: bf16 (7 bits) > f16 (10) > f32 (23) > f64 (52, the reference,
+    where the error is identically zero).  Both 16-bit formats are the same
+    2 bytes/entry on the wire; bf16 trades mantissa for exponent range, so
+    on a well-scaled state f16 is strictly the more accurate 2-byte option.
+    (The fixed-problem twin of this test lives in test_serving_quant.py so
+    it runs even without hypothesis.)
+    """
+    state, rng2 = _random_state(seed, m=9, d=3)
+    xs = jnp.asarray(rng2.standard_normal((40, 2)))
+    mean64, var64 = (jnp.asarray(a) for a in
+                     PredictEngine(state, block_size=16).predict(xs))
+    errs = {dt: _quant_rmse(state, xs, mean64, var64, dt)
+            for dt in ("bfloat16", "float16", "float32", "float64")}
+    for kind in (0, 1):   # mean RMSE, var RMSE
+        assert errs["bfloat16"][kind] > errs["float16"][kind] > \
+            errs["float32"][kind] >= errs["float64"][kind]
+    # f64 "quantization" is the identity — exactly zero error.
+    assert errs["float64"] == (0.0, 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_astype_roundtrip_through_f64_is_projection(seed):
+    """Quantize -> widen -> quantize is idempotent (astype is a projection
+    onto the representable grid, not an accumulating perturbation)."""
+    state, _ = _random_state(seed, m=5, d=2)
+    once = state.astype(jnp.bfloat16)
+    twice = once.astype(jnp.float64).astype(jnp.bfloat16)
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,210 @@
+"""Statistical correctness of posterior sampling (`PredictEngine.sample`).
+
+Sampling is stochastic, so "correct" here is statistical, not bitwise: the
+empirical moments of the draws must converge to the analytic posterior
+(`predict(full_cov=True)`) at the Monte-Carlo rate.  Every bound below is a
+multiple of the estimator's standard error, and every test uses a fixed
+PRNG key, so the draws — and hence the pass/fail — are deterministic.
+
+The structural contracts ride along: same key => same samples, distinct
+keys => independent draws, pad rows can never leak into real samples (the
+lower-triangular-chol prefix property), and blocks are jointly sampled
+within / independent across.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SGPR
+from repro.core.stats import partial_stats
+from repro.serve import PredictEngine, extract_state, sample_joint
+
+from conftest import make_regression
+
+
+def _hyp(rng, q):
+    return {"log_sf2": jnp.asarray(rng.uniform(-0.5, 0.8)),
+            "log_ell": jnp.asarray(rng.uniform(-0.4, 0.4, q)),
+            "log_beta": jnp.asarray(1.2)}
+
+
+def _state(rng, n=90, m=13, q=2, d=3):
+    hyp = _hyp(rng, q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return extract_state(hyp, z, stats)
+
+
+S = 4000   # draws per statistical test; SE bounds below scale as 1/sqrt(S)
+
+
+def test_sample_moments_match_full_cov(rng):
+    """Empirical mean within 5 SE and empirical covariance within 6 SE of
+    the analytic joint posterior, per output dim (t <= block_size, so the
+    whole batch is ONE jointly-sampled block)."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((8, 2)))
+    mean, cov = eng.predict_full_cov(xs)
+    smp = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(1)))   # (S, 8, 3)
+    c = np.asarray(cov)
+    sd = np.sqrt(np.diag(c))
+
+    # mean estimator: SE = sqrt(c_ii / S)
+    err_mean = np.abs(smp.mean(0) - np.asarray(mean))
+    assert (err_mean <= 5.0 * sd[:, None] / np.sqrt(S) + 1e-12).all()
+
+    # cov estimator: SE(i,j) = sqrt((c_ii c_jj + c_ij^2) / S)
+    se_cov = np.sqrt((np.outer(sd**2, sd**2) + c**2) / S)
+    for j in range(smp.shape[2]):
+        r = smp[:, :, j] - np.asarray(mean)[None, :, j]
+        emp_cov = r.T @ r / S
+        assert (np.abs(emp_cov - c) <= 6.0 * se_cov + 1e-12).all()
+
+
+def test_same_key_deterministic(rng):
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((11, 2)))
+    a = eng.sample(xs, 16, jax.random.PRNGKey(3))
+    b = eng.sample(xs, 16, jax.random.PRNGKey(3))
+    assert a.shape == (16, 11, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_distinct_keys_independent(rng):
+    """Different keys give different draws, and the two sets are
+    *uncorrelated*: the cross-moment E[r1 r2] has SE c_ii/sqrt(S)."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((8, 2)))
+    mean, cov = eng.predict_full_cov(xs)
+    s1 = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(10)))
+    s2 = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(11)))
+    assert not np.array_equal(s1, s2)
+    mu = np.asarray(mean)
+    c_diag = np.diag(np.asarray(cov))
+    for j in range(s1.shape[2]):
+        cross = np.mean((s1[:, :, j] - mu[None, :, j]) *
+                        (s2[:, :, j] - mu[None, :, j]), axis=0)
+        assert (np.abs(cross) <= 5.0 * c_diag / np.sqrt(S) + 1e-12).all()
+
+
+def test_pad_rows_never_leak(rng):
+    """The chol factor is lower-triangular, so the leading rows of a padded
+    block draw *identical* samples to an unpadded call with the same key —
+    pad rows cannot influence real rows, bitwise."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((8, 2)))
+    full = eng.sample(xs, 32, jax.random.PRNGKey(7))        # no padding
+    short = eng.sample(xs[:5], 32, jax.random.PRNGKey(7))   # 5 -> 8 padded
+    assert short.shape == (32, 5, 3)
+    np.testing.assert_array_equal(np.asarray(short),
+                                  np.asarray(full)[:, :5, :])
+
+
+def test_odd_t_multi_block_moments(rng):
+    """Several blocks plus a padded tail: per-row mean/variance statistics
+    still converge to the diag posterior (pad rows never contaminate)."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=4)
+    xs = jnp.asarray(rng.standard_normal((11, 2)))          # 11 -> 12 padded
+    mean, var = eng.predict(xs)
+    smp = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(2)))
+    assert smp.shape == (S, 11, 3)
+    sd = np.sqrt(np.asarray(var))
+    err_mean = np.abs(smp.mean(0) - np.asarray(mean))
+    assert (err_mean <= 5.0 * sd[:, None] / np.sqrt(S) + 1e-12).all()
+    # variance estimator: SE ~ sqrt(2/S) sigma^2
+    emp_var = smp.var(axis=0)
+    se_var = np.sqrt(2.0 / S) * np.asarray(var)
+    assert (np.abs(emp_var - np.asarray(var)[:, None]) <=
+            6.0 * se_var[:, None] + 1e-12).all()
+
+
+def test_cross_block_independence(rng):
+    """Blocks are drawn independently: the empirical covariance between a
+    row of block 0 and a row of block 1 is zero to within SE (the
+    block-diagonal design of the scan sampler)."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=4)
+    xs = jnp.asarray(rng.standard_normal((8, 2)))           # exactly 2 blocks
+    mean, var = eng.predict(xs)
+    smp = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(4)))
+    mu, sd = np.asarray(mean), np.sqrt(np.asarray(var))
+    r = smp[:, :, 0] - mu[None, :, 0]
+    for i in range(4):
+        for j in range(4, 8):
+            cross = np.mean(r[:, i] * r[:, j])
+            assert abs(cross) <= 5.0 * sd[i] * sd[j] / np.sqrt(S) + 1e-12
+
+
+def test_include_noise_inflates_variance(rng):
+    """include_noise draws observation (not latent-f) samples: empirical
+    per-row variance matches var + 1/beta within SE."""
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((8, 2)))
+    _, var = eng.predict(xs, include_noise=True)
+    smp = np.asarray(eng.sample(xs, S, jax.random.PRNGKey(6),
+                                include_noise=True))
+    v = np.asarray(var)
+    emp_var = smp.var(axis=0)
+    se_var = np.sqrt(2.0 / S) * v
+    assert (np.abs(emp_var - v[:, None]) <= 6.0 * se_var[:, None] + 1e-12).all()
+
+
+def test_sample_joint_is_one_piece(rng):
+    """posterior.sample_joint: exact joint over all queries (the small-t
+    mode) — deterministic per key, mean within SE."""
+    state = _state(rng)
+    xs = jnp.asarray(rng.standard_normal((9, 2)))
+    a = sample_joint(state, xs, jax.random.PRNGKey(0), S)
+    b = sample_joint(state, xs, jax.random.PRNGKey(0), 4)
+    assert a.shape == (S, 9, 3) and b.shape == (4, 9, 3)
+    eng = PredictEngine(state, block_size=16)
+    mean, cov = eng.predict_full_cov(xs)
+    sd = np.sqrt(np.diag(np.asarray(cov)))
+    err = np.abs(np.asarray(a).mean(0) - np.asarray(mean))
+    assert (err <= 5.0 * sd[:, None] / np.sqrt(S) + 1e-12).all()
+
+
+def test_sample_rejects_bad_args(rng):
+    state = _state(rng)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((4, 2)))
+    with pytest.raises(ValueError, match="num_samples"):
+        eng.sample(xs, 0, jax.random.PRNGKey(0))
+    lossy = PredictEngine(state.astype(jnp.bfloat16), block_size=8,
+                          compute_dtype=jnp.bfloat16)
+    with pytest.raises(ValueError, match="Cholesky"):
+        lossy.sample(xs, 2, jax.random.PRNGKey(0))
+    # Quantized *storage* also refuses: sub-f32 rounding of g can make the
+    # re-factorised block covariance indefinite (serve mean/var instead).
+    quant = PredictEngine(state.astype(jnp.bfloat16), block_size=8)
+    with pytest.raises(ValueError, match="storage"):
+        quant.sample(xs, 2, jax.random.PRNGKey(0))
+    # The raw sampling functions refuse quantized states too (a silent
+    # NaN-returning Cholesky would otherwise ship garbage draws).
+    with pytest.raises(ValueError, match="f32/f64"):
+        sample_joint(state.astype(jnp.bfloat16), xs, jax.random.PRNGKey(0), 2)
+
+
+def test_sgpr_sample_wrapper(rng):
+    """The model-side convenience: shapes, seed determinism, and agreement
+    of the sample mean with the model's own predict to within SE."""
+    x, y = make_regression(rng, n=60, q=2, d=2)
+    model = SGPR(x, y, num_inducing=8, seed=0)
+    xs = x[:9]
+    smp = model.sample(xs, 800, seed=1)
+    assert smp.shape == (800, 9, 2) and np.isfinite(smp).all()
+    np.testing.assert_array_equal(smp, model.sample(xs, 800, seed=1))
+    assert not np.array_equal(smp, model.sample(xs, 800, seed=2))
+    mean, var = model.predict(xs)
+    se = np.sqrt(var / 800.0)
+    assert (np.abs(smp.mean(0) - mean) <= 5.0 * se[:, None] + 1e-12).all()
