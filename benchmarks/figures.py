@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BayesianGPLVM, SGPR
+from repro.core import BayesianGPLVM
 from repro.core import gp_kernels as gpk
 from repro.core.scg import scg
 from repro.core.stats import partial_stats
@@ -110,8 +110,6 @@ def fig4_parity(n=400, iters=120):
     fn = make_shard_fn(hyp, z, y.shape[1], latent=True)
     shards = split_shards(y, mu, s, 8)
     b_dist, _ = mapreduce_iteration(fn, shards, hyp, z, y.shape[1])
-    kl = float(gpk.kl_to_standard_normal(jnp.asarray(mu), jnp.asarray(s)))
-    parity = abs((b_dist - kl * 0) - b0 - 0.0)  # bound includes KL already
     print(f"  bound(sequential)={b0:.4f} bound(distributed)={b_dist:.4f} "
           f"|diff|={abs(b_dist - b0):.2e}")
 
@@ -167,8 +165,6 @@ def fig7_node_failure(n=300, nodes=10, iters=150):
 
         def fg(xf):
             p = unravel(jnp.asarray(xf))
-            mu = p["mu"]
-            s = jnp.exp(p["log_s"])
             mask = np.repeat(sim.mask(), n // nodes + 1)[:n]
             total_w = float(mask.sum())
             w = jnp.asarray(mask)

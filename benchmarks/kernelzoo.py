@@ -1,0 +1,152 @@
+"""Kernel-zoo benchmark: map-step and predict throughput per covariance
+expression, both kernel backends.
+
+The compositional kernel layer dispatches the fused Pallas fast path only
+for the full-width SE-ARD expression; every other expression runs the
+generic XLA fallback (its own analytic forms or Gauss-Hermite quadrature).
+This sweep measures what that dispatch decision costs:
+
+  * map step  — the chunked regression map (``partial_stats_chunked``) per
+    expression, XLA dense vs the engine shim (fused Pallas for SE, generic
+    fallback otherwise): the fused-SE vs generic gap is the price of a
+    non-SE covariance on the training path.
+  * psi map   — the GPLVM (latent) map per expression: analytic psi
+    (SE/Linear/disjoint compositions) vs quadrature psi (Matern32/Periodic),
+    the analytic-vs-quadrature gap.
+  * predict   — warm serving throughput per expression through
+    ``PredictEngine`` under both backends.
+
+Parity between the two backends is asserted as it runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariance as cov
+from repro.core.stats import partial_stats_chunked
+from repro.kernels.reg_stats import reg_stats_fn_for_engine
+from repro.serve import PredictEngine, extract_state
+
+
+def _zoo(q):
+    half = tuple(range(q // 2)) or (0,)
+    rest = tuple(range(q // 2, q)) or (0,)
+    return {
+        "se": cov.SEARD(),
+        "matern32": cov.Matern32(quad_order=5),
+        "linear": cov.Linear(),
+        "periodic": cov.Periodic(quad_order=5),
+        "sum": cov.Sum(cov.SEARD(dims=half), cov.Linear(dims=rest)),
+        "product": cov.Product(cov.SEARD(dims=half),
+                               cov.Matern32(dims=rest, quad_order=5)),
+    }
+
+
+def _hyp_for(kernel, q):
+    hyp = jax.tree.map(lambda v: jnp.asarray(v, jnp.float64),
+                       kernel.default_hyp(q))
+    hyp["log_beta"] = jnp.asarray(np.log(100.0))
+    return hyp
+
+
+def _median_time(fn, iters):
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def kernel_zoo(n=30_000, q=2, d=2, m=64, t=4096, block=1024, iters=3):
+    """Per-expression map/psi/predict timing and the fused-SE gap."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    s = jnp.asarray(rng.uniform(0.05, 0.3, (n, q)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    xs = jnp.asarray(rng.standard_normal((t, q)))
+    rows = []
+    map_times: dict[str, float] = {}
+
+    for name, kern in _zoo(q).items():
+        hyp = _hyp_for(kern, q)
+
+        # -- regression map step: XLA dense vs the engine shim --------------
+        shim = reg_stats_fn_for_engine(block_n=128, block_m=32, kernel=kern)
+
+        @jax.jit
+        def map_xla(hyp_, kern_=kern):
+            return partial_stats_chunked(hyp_, z, y, x, s=None, latent=False,
+                                         block_size=block, kernel=kern_)
+
+        @jax.jit
+        def map_shim(hyp_, shim_=shim):
+            return partial_stats_chunked(hyp_, z, y, x, s=None, latent=False,
+                                         block_size=block, reg_stats_fn=shim_)
+
+        st_x = jax.block_until_ready(map_xla(hyp))
+        st_s = jax.block_until_ready(map_shim(hyp))
+        rel = float(jnp.max(jnp.abs(st_s.D - st_x.D)) /
+                    (jnp.max(jnp.abs(st_x.D)) + 1e-30))
+        tol = 1e-4 if jax.default_backend() == "tpu" else 1e-8
+        assert rel < tol, f"{name}: shim map diverged rel={rel:.2e}"
+        dt_x = _median_time(lambda: map_xla(hyp), iters)
+        dt_s = _median_time(lambda: map_shim(hyp), iters)
+        map_times[name] = dt_s
+        fused = "fused_se" if cov.is_fused_se(kern) else "generic"
+        rows.append((f"kernelzoo/map_xla_{name}", dt_x * 1e6,
+                     f"rows_per_s={n / dt_x:.0f}"))
+        rows.append((f"kernelzoo/map_shim_{name}", dt_s * 1e6,
+                     f"path={fused};rows_per_s={n / dt_s:.0f}"))
+        print(f"  map  {name:>9}: xla {dt_x * 1e3:8.2f} ms  "
+              f"shim[{fused}] {dt_s * 1e3:8.2f} ms  "
+              f"({n / dt_s:10.0f} rows/s)")
+
+        # -- GPLVM (psi) map: analytic vs quadrature route -------------------
+        @jax.jit
+        def map_psi(hyp_, kern_=kern):
+            return partial_stats_chunked(hyp_, z, y, x, s=s, latent=True,
+                                         block_size=block, kernel=kern_)
+
+        jax.block_until_ready(map_psi(hyp))
+        dt_p = _median_time(lambda: map_psi(hyp), iters)
+        route = "analytic" if kern.analytic_psi() else "quadrature"
+        rows.append((f"kernelzoo/psi_map_{name}", dt_p * 1e6,
+                     f"route={route};rows_per_s={n / dt_p:.0f}"))
+        print(f"  psi  {name:>9}: [{route:>10}] {dt_p * 1e3:8.2f} ms  "
+              f"({n / dt_p:10.0f} rows/s)")
+
+        # -- serving predict throughput, both engine backends ----------------
+        st = jax.block_until_ready(map_shim(hyp))
+        state = extract_state(hyp, z, st, kernel=kern)
+        ref = None
+        for backend in ("xla", "pallas"):
+            eng = PredictEngine(state, block_size=min(block, 512),
+                                kernel_backend=backend)
+            mean, var = eng.predict(xs)                  # compile + parity
+            if ref is None:
+                ref = mean
+            else:
+                relp = float(jnp.max(jnp.abs(mean - ref)) /
+                             (jnp.max(jnp.abs(ref)) + 1e-30))
+                assert relp < tol, f"{name}/{backend}: rel={relp:.2e}"
+            dt = _median_time(lambda: eng.predict(xs), iters)
+            rows.append((f"kernelzoo/predict_{backend}_{name}", dt * 1e6,
+                         f"qps={t / dt:.0f}"))
+            print(f"  pred {name:>9} [{backend:>6}]: {dt * 1e3:8.2f} ms  "
+                  f"({t / dt:10.0f} q/s)")
+
+    # -- the headline number: fused SE vs the generic fallbacks -------------
+    se_t = map_times["se"]
+    for name, dt in map_times.items():
+        if name == "se":
+            continue
+        rows.append((f"kernelzoo/map_gap_{name}", dt * 1e6,
+                     f"vs_fused_se={dt / se_t:.2f}x"))
+        print(f"  gap  {name:>9}: {dt / se_t:5.2f}x fused-SE map time")
+    return rows

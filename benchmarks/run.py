@@ -6,7 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
 import argparse
 import sys
 
-from . import figures, serving, streaming
+from . import figures, kernelzoo, serving, streaming
 
 
 ALL = {
@@ -23,6 +23,7 @@ ALL = {
     "svi": streaming.svi_map,
     "predict": serving.predict_serving,
     "serve_ext": serving.serving_extensions,
+    "kernelzoo": kernelzoo.kernel_zoo,
 }
 
 FAST_ARGS = {
@@ -43,6 +44,7 @@ FAST_ARGS = {
                     block=128, iters=2),
     "serve_ext": dict(n=4096, m=32, t=256, block=64, s_sweep=(1, 8, 32),
                       n_models_sweep=(1, 2, 4), iters=2),
+    "kernelzoo": dict(n=4096, m=32, t=512, block=512, iters=2),
 }
 
 

@@ -1,0 +1,59 @@
+"""Kernel zoo walkthrough: a composite covariance end-to-end.
+
+Fits a function with a linear trend plus a smooth bump using
+``Sum(SEARD(dims=(0,)), Linear(dims=(1,)))``, compares it against the
+default SE-ARD, then serves the fitted posterior — the kernel spec rides
+in the checkpoint sidecar, so the reload needs no model code.
+
+  PYTHONPATH=src python examples/kernel_zoo.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import SEARD, SGPR, Linear, Sum
+from repro.serve import PredictEngine, load_state, save_state, state_from_model
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 400
+    # dim 0 drives a smooth nonlinearity, dim 1 a pure linear trend.
+    x = rng.uniform(-3, 3, size=(n, 2))
+    f = np.sin(2.0 * x[:, :1]) + 0.8 * x[:, 1:]
+    y = f + 0.1 * rng.standard_normal((n, 1))
+
+    kern = Sum(SEARD(dims=(0,)), Linear(dims=(1,)))
+    print(f"kernel spec: {kern}")
+
+    model = SGPR(x, y, num_inducing=30, kernel=kern, seed=0)
+    model.fit(max_iters=100)
+    se = SGPR(x, y, num_inducing=30, seed=0)
+    se.fit(max_iters=100)
+    print(f"bound  Sum(SE0, Linear1): {model.log_bound():10.2f}")
+    print(f"bound  SE-ARD (default) : {se.log_bound():10.2f}")
+
+    xs = rng.uniform(-3, 3, size=(200, 2))
+    true = np.sin(2.0 * xs[:, :1]) + 0.8 * xs[:, 1:]
+    for name, mdl in (("composite", model), ("se-ard", se)):
+        mean, _ = mdl.predict(xs)
+        rmse = float(np.sqrt(np.mean((mean - true) ** 2)))
+        print(f"test RMSE [{name:>9}]: {rmse:.4f}")
+
+    # Serving round-trip: the sidecar carries the kernel spec.
+    state = state_from_model(model)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "zoo_state.npz")
+        save_state(path, state)
+        loaded, meta = load_state(path)
+        print(f"restored kernel from sidecar: {loaded.kernel}")
+        eng = PredictEngine(loaded, block_size=64)
+        mean, var = eng.predict(xs)
+        rmse = float(np.sqrt(np.mean((np.asarray(mean) - true) ** 2)))
+        print(f"served RMSE (reloaded state): {rmse:.4f}  "
+              f"(mean var {float(np.mean(var)):.4f})")
+
+
+if __name__ == "__main__":
+    main()

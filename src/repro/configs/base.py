@@ -8,8 +8,7 @@ the four assigned (seq_len, global_batch) cells; ``long_500k`` is only
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 # ---------------------------------------------------------------------------
 

@@ -18,7 +18,16 @@ class GPConfig:
     q: int             # latent / input dims
     m: int             # inducing points
     latent: bool       # GPLVM (True) or regression (False)
+    # Covariance expression as a JSON spec string for core.covariance.
+    # kernel_from_spec / as_kernel; "se" (full-width SE-ARD, the paper's
+    # kernel) keeps the fused Pallas fast path.
+    kernel: str = "se"
     source: str = ""
+
+    def kernel_expr(self):
+        """The parsed covariance expression (core.covariance.Kernel)."""
+        from ..core.covariance import as_kernel
+        return as_kernel(self.kernel)
 
 
 GP_CONFIGS: dict[str, GPConfig] = {
@@ -31,5 +40,12 @@ GP_CONFIGS: dict[str, GPConfig] = {
                  source="paper §4.5 USPS"),
         GPConfig("sgpr-synth-1m", n=1_000_000, d=4, q=8, m=512, latent=False,
                  source="beyond-paper scale point (512-chip headroom)"),
+        GPConfig("sgpr-zoo-trend", n=100_000, d=2, q=4, m=128, latent=False,
+                 kernel='{"kind": "sum", "parts": ['
+                        '{"kind": "se", "dims": [0, 1]}, '
+                        '{"kind": "linear", "dims": [2, 3]}], '
+                        '"quad_order": 11}',
+                 source="kernel-zoo composite (smooth + linear trend), "
+                        "docs/kernels.md#kernel-zoo"),
     ]
 }

@@ -2,7 +2,8 @@
 inference for sparse GP regression and the Bayesian GPLVM.
 
 Public API:
-  gp_kernels     SE-ARD kernel + closed-form psi statistics
+  covariance     compositional kernel expressions + psi-stat dispatch
+  gp_kernels     SE-ARD closed forms (the covariance layer's SE entry)
   stats          per-shard partial sufficient statistics (the "map")
   bound          collapsed bound (paper eq. 3.3), optimal q(u), prediction
   distributed    shard_map Map-Reduce engine (the "reduce" + global step)
@@ -10,16 +11,20 @@ Public API:
   scg            scaled conjugate gradient (Moller 1993)
   ref_naive      O(n^3) oracles for tests
 """
-from . import bound, distributed, gp_kernels, init_utils, ref_naive, scg, stats
+from . import (bound, covariance, distributed, gp_kernels, init_utils,
+               ref_naive, scg, stats)
 from .bound import QU, collapsed_bound, optimal_qu, predict
+from .covariance import (SEARD, Linear, Matern32, Periodic, Product, Sum,
+                         kernel_from_spec)
 from .distributed import DistributedGP
 from .gplvm import BayesianGPLVM
 from .sgpr import SGPR
 from .stats import Stats, partial_stats, partial_stats_chunked, zero_stats
 
 __all__ = [
-    "bound", "distributed", "gp_kernels", "init_utils", "ref_naive", "scg",
-    "stats", "QU", "collapsed_bound", "optimal_qu", "predict",
-    "DistributedGP", "BayesianGPLVM", "SGPR", "Stats", "partial_stats",
-    "partial_stats_chunked", "zero_stats",
+    "bound", "covariance", "distributed", "gp_kernels", "init_utils",
+    "ref_naive", "scg", "stats", "QU", "collapsed_bound", "optimal_qu",
+    "predict", "SEARD", "Matern32", "Linear", "Periodic", "Sum", "Product",
+    "kernel_from_spec", "DistributedGP", "BayesianGPLVM", "SGPR", "Stats",
+    "partial_stats", "partial_stats_chunked", "zero_stats",
 ]

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
-from . import gp_kernels as gpk
+from . import covariance as cov
 from .stats import Stats
 
 Array = jax.Array
@@ -38,11 +38,14 @@ Array = jax.Array
 DEFAULT_JITTER = 1e-6
 
 
-def _chol_kmm(hyp: dict, z: Array, jitter: float) -> Array:
+def _chol_kmm(hyp: dict, z: Array, jitter: float,
+              kernel: "cov.Kernel | None" = None) -> Array:
+    kernel = cov.as_kernel(kernel)
     m = z.shape[0]
-    kmm = gpk.ard_kernel(hyp, z, z)
-    sf2 = jnp.exp(hyp["log_sf2"])
-    return jnp.linalg.cholesky(kmm + (jitter * sf2 + 1e-12) * jnp.eye(m, dtype=z.dtype))
+    kmm = kernel.K(hyp, z, z)
+    # Jitter scaled by the kernel's signal variance (unit-free).
+    vs = kernel.variance_scale(hyp)
+    return jnp.linalg.cholesky(kmm + (jitter * vs + 1e-12) * jnp.eye(m, dtype=z.dtype))
 
 
 def collapsed_bound(
@@ -51,12 +54,13 @@ def collapsed_bound(
     stats: Stats,
     d: int,
     jitter: float = DEFAULT_JITTER,
+    kernel: "cov.Kernel | None" = None,
 ) -> Array:
     """Paper eq. 3.3 from reduced statistics. Returns a scalar lower bound."""
     beta = jnp.exp(hyp["log_beta"])
     n = stats.n
     m = z.shape[0]
-    L = _chol_kmm(hyp, z, jitter)
+    L = _chol_kmm(hyp, z, jitter, kernel)
 
     # W = L^-1 D L^-T   (m, m)
     LiD = jsl.solve_triangular(L, stats.D, lower=True)
@@ -96,11 +100,12 @@ class QU(NamedTuple):
     c2: Array         # LB^-1 L^-1 C (whitened info vector)
 
 
-def optimal_qu(hyp: dict, z: Array, stats: Stats, jitter: float = DEFAULT_JITTER) -> QU:
+def optimal_qu(hyp: dict, z: Array, stats: Stats, jitter: float = DEFAULT_JITTER,
+               kernel: "cov.Kernel | None" = None) -> QU:
     """The analytically-optimal variational distribution over inducing values."""
     beta = jnp.exp(hyp["log_beta"])
     m = z.shape[0]
-    L = _chol_kmm(hyp, z, jitter)
+    L = _chol_kmm(hyp, z, jitter, kernel)
     LiD = jsl.solve_triangular(L, stats.D, lower=True)
     W = jsl.solve_triangular(L, LiD.T, lower=True).T
     Bmat = jnp.eye(m, dtype=z.dtype) + beta * W
@@ -123,25 +128,27 @@ def predict(
     xstar: Array,
     full_cov: bool = False,
     include_noise: bool = False,
+    kernel: "cov.Kernel | None" = None,
 ) -> tuple[Array, Array]:
     """SGPR predictive posterior p(F*|Y) at inputs xstar (t, q).
 
     mean = b K*m Sigma^-1 C ; var = k** - K*m (Kmm^-1 - Sigma^-1) Km*.
     Returns (mean (t,d), var (t,) or cov (t,t)).
     """
+    kernel = cov.as_kernel(kernel)
     beta = jnp.exp(hyp["log_beta"])
-    ksm = gpk.ard_kernel(hyp, xstar, z)                      # (t, m)
+    ksm = kernel.K(hyp, xstar, z)                            # (t, m)
     a1 = jsl.solve_triangular(qu.L, ksm.T, lower=True)       # L^-1 Km*
     a2 = jsl.solve_triangular(qu.LB, a1, lower=True)         # LB^-1 L^-1 Km*
     mean = beta * (a2.T @ qu.c2)                             # (t, d)
 
     if full_cov:
-        kss = gpk.ard_kernel(hyp, xstar, xstar)
-        cov = kss - a1.T @ a1 + a2.T @ a2
+        kss = kernel.K(hyp, xstar, xstar)
+        covm = kss - a1.T @ a1 + a2.T @ a2
         if include_noise:
-            cov = cov + jnp.eye(xstar.shape[0], dtype=cov.dtype) / beta
-        return mean, cov
-    kss = gpk.ard_kdiag(hyp, xstar)
+            covm = covm + jnp.eye(xstar.shape[0], dtype=covm.dtype) / beta
+        return mean, covm
+    kss = kernel.kdiag(hyp, xstar)
     var = kss - jnp.sum(a1 * a1, axis=0) + jnp.sum(a2 * a2, axis=0)
     if include_noise:
         var = var + 1.0 / beta

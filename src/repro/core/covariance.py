@@ -1,0 +1,635 @@
+"""Compositional covariance expressions with psi-statistics dispatch.
+
+The paper's decoupled bound is derived for *any* kernel whose expectations
+against a diagonal Gaussian q(X) — the psi statistics — are tractable.  This
+module turns the covariance into a swappable **expression**: primitive
+kernels are frozen dataclasses (hashable static metadata, safe to close over
+in jitted programs and to hang off a :class:`~repro.serve.posterior.
+PredictiveState` as pytree aux data) exposing one uniform interface
+
+    K(hyp, a, b)            (n, m)  cross-covariance
+    kdiag(hyp, a)           (n,)    diag(K_aa)
+    psi0(hyp, mu, s)        (n,)    <k(x_i, x_i)>_q
+    psi1(hyp, z, mu, s)     (n, m)  <k(x_i, z_m)>_q
+    psi2_per_point(...)     (n, m, m)
+    psi2(hyp, z, mu, s, w)  (m, m)  Sum_i w_i <k(x_i,z_a) k(x_i,z_b)>_q
+
+with hyper-parameters carried in the same log-space dict the rest of the
+repo uses.  Primitives read their own keys (``log_sf2``/``log_ell``/...)
+and ignore others (``log_beta`` rides in the same top-level dict);
+combinators nest each child's parameters under ``"k0"``, ``"k1"``, ... so
+one pytree carries the whole expression's parameters.
+
+Psi statistics are **analytic where a closed form exists** (`SE-ARD`,
+`Linear`, and disjoint-dims compositions) and fall back to tensor-product
+**Gauss–Hermite quadrature** otherwise (`Matern32`, `Periodic`,
+overlapping-dims compositions) — the GPflow-expectations dispatch pattern.
+Combinator dispatch is structural:
+
+  * ``Sum.psi0/psi1`` are exact by linearity of expectation, whatever the
+    children do.
+  * ``Sum.psi2`` cross terms ``<k_i(x,z_a) k_j(x,z_b)>`` factor into
+    ``psi1_i ⊗ psi1_j`` (the product-of-expectations identity) when the two
+    children act on **disjoint** ``dims`` — under a diagonal q(X) those
+    coordinates are independent.  Overlapping children quadrature the
+    composite expression instead (exact to quadrature order).
+  * ``Product`` psi stats factor the same way for pairwise-disjoint
+    children, else quadrature.
+
+Quadrature integrates only over the expression's ``support_dims`` (the
+union of active dims), with a tensor-product grid — O(order^|dims|) nodes,
+fine for the low-dimensional latent spaces the GPLVM targets; keep
+``quad_order`` modest and dims few (docs/kernels.md#kernel-zoo).
+
+Serialisation: ``to_spec()`` / :func:`kernel_from_spec` round-trip an
+expression through a JSON-able dict (the checkpoint sidecar format), so a
+serving process restores the right covariance with no model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gp_kernels as gpk
+
+Array = jax.Array
+
+# -- registry ----------------------------------------------------------------
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_kernel(name: str):
+    """Class decorator: add a kernel expression class to the spec registry."""
+
+    def wrap(cls):
+        cls.kind = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return wrap
+
+
+def kernel_names() -> tuple[str, ...]:
+    """Registered expression kinds (primitives + combinators)."""
+    return tuple(sorted(_REGISTRY))
+
+
+# -- Gauss–Hermite quadrature fallback ---------------------------------------
+
+def _gh_grid(n_dims: int, order: int):
+    """Tensor-product Gauss–Hermite grid for E_{t~N(0,I)}[f(t)] over
+    ``n_dims`` dims: returns unit-Gaussian nodes (J, n_dims) and weights
+    (J,) with J = order**n_dims.  Static (numpy, trace-time)."""
+    t, w = np.polynomial.hermite.hermgauss(order)   # ∫ e^{-t²} f(t) dt
+    t = t * np.sqrt(2.0)                            # unit-Gaussian nodes
+    w = w / np.sqrt(np.pi)
+    grids = np.meshgrid(*([t] * n_dims), indexing="ij")
+    nodes = np.stack([g.ravel() for g in grids], axis=-1)
+    ws = np.ones((order ** n_dims,))
+    for g in np.meshgrid(*([w] * n_dims), indexing="ij"):
+        ws = ws * g.ravel()
+    return nodes, ws
+
+
+def _gh_points(kernel: "Kernel", mu: Array, s: Array):
+    """Sample points of q(X) on the kernel's support dims: returns
+    ``(xs (n, J, q), ws (J,))`` with non-support dims pinned at mu (the
+    kernel never reads them)."""
+    n, q = mu.shape
+    dims = kernel.support_dims(q)
+    nodes, ws = _gh_grid(len(dims), kernel.quad_order)
+    nodes = jnp.asarray(nodes, mu.dtype)            # (J, |dims|)
+    ws = jnp.asarray(ws, mu.dtype)
+    idx = jnp.asarray(dims)
+    sd = jnp.sqrt(s[:, idx])                        # (n, |dims|)
+    xs = jnp.broadcast_to(mu[:, None, :], (n, nodes.shape[0], q))
+    vals = mu[:, None, idx] + sd[:, None, :] * nodes[None, :, :]
+    return xs.at[:, :, idx].set(vals), ws
+
+
+def psi0_quad(kernel: "Kernel", hyp: dict, mu: Array, s: Array) -> Array:
+    """<k(x_i, x_i)> by Gauss–Hermite quadrature: (n,)."""
+    xs, ws = _gh_points(kernel, mu, s)
+    n, j, q = xs.shape
+    kd = kernel.kdiag(hyp, xs.reshape(n * j, q)).reshape(n, j)
+    return kd @ ws
+
+
+def psi1_quad(kernel: "Kernel", hyp: dict, z: Array, mu: Array,
+              s: Array) -> Array:
+    """<k(x_i, z_m)> by Gauss–Hermite quadrature: (n, m)."""
+    xs, ws = _gh_points(kernel, mu, s)
+    n, j, q = xs.shape
+    k = kernel.K(hyp, xs.reshape(n * j, q), z).reshape(n, j, -1)
+    return jnp.einsum("j,njm->nm", ws, k)
+
+
+def psi2_per_point_quad(kernel: "Kernel", hyp: dict, z: Array, mu: Array,
+                        s: Array) -> Array:
+    """<k(x_i, z_a) k(x_i, z_b)> by Gauss–Hermite quadrature: (n, m, m)."""
+    xs, ws = _gh_points(kernel, mu, s)
+    n, j, q = xs.shape
+    k = kernel.K(hyp, xs.reshape(n * j, q), z).reshape(n, j, -1)
+    return jnp.einsum("j,nja,njb->nab", ws, k, k)
+
+
+# -- the expression interface ------------------------------------------------
+
+@dataclass(frozen=True)
+class Kernel:
+    """Base covariance expression.  Frozen/hashable: instances are static
+    *structure* — all numbers live in the ``hyp`` dict pytree."""
+
+    kind: ClassVar[str] = "?"
+
+    # Every expression carries a quadrature order for its fallback psi
+    # stats; analytic expressions never consult it.
+    quad_order: ClassVar[int] = 11
+
+    # -- covariance ---------------------------------------------------------
+    def K(self, hyp: dict, a: Array, b: Array) -> Array:
+        raise NotImplementedError
+
+    def kdiag(self, hyp: dict, a: Array) -> Array:
+        raise NotImplementedError
+
+    # -- psi statistics (defaults: quadrature fallback) ---------------------
+    def psi0(self, hyp: dict, mu: Array, s: Array) -> Array:
+        return psi0_quad(self, hyp, mu, s)
+
+    def psi1(self, hyp: dict, z: Array, mu: Array, s: Array) -> Array:
+        return psi1_quad(self, hyp, z, mu, s)
+
+    def psi2_per_point(self, hyp: dict, z: Array, mu: Array,
+                       s: Array) -> Array:
+        return psi2_per_point_quad(self, hyp, z, mu, s)
+
+    def psi2(self, hyp: dict, z: Array, mu: Array, s: Array,
+             w: Array) -> Array:
+        """Weighted Psi2 (the D statistic).  The default contracts the
+        per-point form — exactly what the pre-refactor map step did."""
+        p2 = self.psi2_per_point(hyp, z, mu, s)
+        return jnp.einsum("i,iab->ab", w, p2)
+
+    # -- structure metadata -------------------------------------------------
+    def support_dims(self, q: int) -> tuple[int, ...]:
+        """Input dims this expression reads (quadrature integrates these)."""
+        dims = getattr(self, "dims", None)
+        return tuple(range(q)) if dims is None else tuple(dims)
+
+    def analytic_psi(self) -> bool:
+        """True when ALL psi statistics use closed forms (no quadrature)."""
+        return False
+
+    def variance_scale(self, hyp: dict) -> Array:
+        """An O(signal-variance) scalar for jitter scaling (unit-free
+        Cholesky jitter, the ``_chol_kmm`` convention)."""
+        raise NotImplementedError
+
+    # -- hyper-parameters ---------------------------------------------------
+    def hyp_shapes(self, q: int) -> dict:
+        """Shape tree of this expression's parameter subtree (checkpoint
+        restore templates; ``log_beta`` is model-level, not included)."""
+        raise NotImplementedError
+
+    def default_hyp(self, q: int, var_y: float = 1.0) -> dict:
+        """Data-driven init of the parameter subtree (numpy, host-side)."""
+        raise NotImplementedError
+
+    # -- serialisation ------------------------------------------------------
+    def to_spec(self) -> dict:
+        """JSON-able structural spec; :func:`kernel_from_spec` inverts it."""
+        out = {"kind": self.kind}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "parts":
+                v = [p.to_spec() for p in v]
+            elif isinstance(v, tuple):
+                v = list(v)
+            out[f.name] = v
+        return out
+
+    def __str__(self) -> str:
+        return json.dumps(self.to_spec())
+
+
+def _as_dims(dims) -> tuple[int, ...] | None:
+    return None if dims is None else tuple(int(d) for d in dims)
+
+
+def _sl(a: Array, dims: tuple[int, ...] | None) -> Array:
+    """Slice the active dims off the trailing axis (no-op when None, so the
+    default full-width path stays bitwise-identical to the legacy one)."""
+    return a if dims is None else a[..., jnp.asarray(dims)]
+
+
+def _q_eff(q: int, dims) -> int:
+    return q if dims is None else len(dims)
+
+
+# -- primitives --------------------------------------------------------------
+
+@register_kernel("se")
+@dataclass(frozen=True)
+class SEARD(Kernel):
+    """Squared-exponential ARD — the paper's kernel; all psi stats closed
+    form (delegates to the ``gp_kernels`` SE math, so the default expression
+    reproduces the legacy path bitwise)."""
+
+    dims: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", _as_dims(self.dims))
+
+    def K(self, hyp, a, b):
+        return gpk.se_kernel(hyp, _sl(a, self.dims), _sl(b, self.dims))
+
+    def kdiag(self, hyp, a):
+        return gpk.se_kdiag(hyp, _sl(a, self.dims))
+
+    def psi0(self, hyp, mu, s):
+        return gpk.se_psi0(hyp, _sl(mu, self.dims), _sl(s, self.dims))
+
+    def psi1(self, hyp, z, mu, s):
+        return gpk.se_psi1(hyp, _sl(z, self.dims), _sl(mu, self.dims),
+                           _sl(s, self.dims))
+
+    def psi2_per_point(self, hyp, z, mu, s):
+        return gpk.psi2_per_point(hyp, _sl(z, self.dims), _sl(mu, self.dims),
+                                  _sl(s, self.dims))
+
+    def analytic_psi(self):
+        return True
+
+    def variance_scale(self, hyp):
+        return jnp.exp(hyp["log_sf2"])
+
+    def hyp_shapes(self, q):
+        return {"log_sf2": (), "log_ell": (_q_eff(q, self.dims),)}
+
+    def default_hyp(self, q, var_y=1.0):
+        qe = _q_eff(q, self.dims)
+        return {"log_sf2": np.log(var_y),
+                "log_ell": np.ones((qe,)) * 0.5 * np.log(max(qe, 1))}
+
+
+@register_kernel("matern32")
+@dataclass(frozen=True)
+class Matern32(Kernel):
+    """Matérn-3/2 with ARD lengthscales: ``sf2 (1 + √3 r) exp(−√3 r)`` with
+    ``r² = Σ_q d_q²/ℓ_q²``.  No closed-form psi statistics (the |r| kink) —
+    psi0/1/2 run the Gauss–Hermite fallback at ``quad_order``."""
+
+    dims: tuple[int, ...] | None = None
+    quad_order: int = 11
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", _as_dims(self.dims))
+
+    def K(self, hyp, a, b):
+        ell = jnp.exp(hyp["log_ell"])
+        sf2 = jnp.exp(hyp["log_sf2"])
+        r2 = gpk.sqdist(_sl(a, self.dims) / ell, _sl(b, self.dims) / ell)
+        # Safe sqrt: clamp keeps the derivative finite at coincident points.
+        r = jnp.sqrt(jnp.maximum(r2, 1e-36))
+        sr3 = jnp.sqrt(3.0) * r
+        return sf2 * (1.0 + sr3) * jnp.exp(-sr3)
+
+    def kdiag(self, hyp, a):
+        sf2 = jnp.exp(hyp["log_sf2"])
+        return jnp.full(a.shape[:-1], sf2, dtype=a.dtype)
+
+    def psi0(self, hyp, mu, s):
+        # <k(x,x)> = sf2 exactly (stationary kernel) — skip the quadrature.
+        del s
+        sf2 = jnp.exp(hyp["log_sf2"])
+        return jnp.full(mu.shape[:-1], sf2, dtype=mu.dtype)
+
+    def variance_scale(self, hyp):
+        return jnp.exp(hyp["log_sf2"])
+
+    def hyp_shapes(self, q):
+        return {"log_sf2": (), "log_ell": (_q_eff(q, self.dims),)}
+
+    def default_hyp(self, q, var_y=1.0):
+        qe = _q_eff(q, self.dims)
+        return {"log_sf2": np.log(var_y),
+                "log_ell": np.ones((qe,)) * 0.5 * np.log(max(qe, 1))}
+
+
+@register_kernel("linear")
+@dataclass(frozen=True)
+class Linear(Kernel):
+    """Linear (dot-product) kernel with per-dim variances:
+    ``k(x, x') = Σ_q sv2_q x_q x'_q``.  All psi stats closed form under a
+    diagonal q(X): second moments of a Gaussian are analytic."""
+
+    dims: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", _as_dims(self.dims))
+
+    def _sv2(self, hyp):
+        return jnp.exp(hyp["log_sv2"])
+
+    def K(self, hyp, a, b):
+        return (_sl(a, self.dims) * self._sv2(hyp)) @ _sl(b, self.dims).T
+
+    def kdiag(self, hyp, a):
+        ad = _sl(a, self.dims)
+        return jnp.sum(self._sv2(hyp) * ad * ad, axis=-1)
+
+    def psi0(self, hyp, mu, s):
+        mud, sd = _sl(mu, self.dims), _sl(s, self.dims)
+        return jnp.sum(self._sv2(hyp) * (mud * mud + sd), axis=-1)
+
+    def psi1(self, hyp, z, mu, s):
+        del s
+        return (_sl(mu, self.dims) * self._sv2(hyp)) @ _sl(z, self.dims).T
+
+    def psi2_per_point(self, hyp, z, mu, s):
+        # <k(x,za) k(x,zb)> = (zaᵀΛμ)(zbᵀΛμ) + zaᵀ Λ diag(S) Λ zb
+        sv2 = self._sv2(hyp)
+        zd, mud, sd = _sl(z, self.dims), _sl(mu, self.dims), _sl(s, self.dims)
+        p1 = (mud * sv2) @ zd.T                               # (n, m)
+        t1 = p1[:, :, None] * p1[:, None, :]
+        t2 = jnp.einsum("aq,nq,bq->nab", zd, (sv2 * sv2) * sd, zd)
+        return t1 + t2
+
+    def analytic_psi(self):
+        return True
+
+    def variance_scale(self, hyp):
+        return jnp.mean(self._sv2(hyp))
+
+    def hyp_shapes(self, q):
+        return {"log_sv2": (_q_eff(q, self.dims),)}
+
+    def default_hyp(self, q, var_y=1.0):
+        qe = _q_eff(q, self.dims)
+        return {"log_sv2": np.full((qe,), np.log(var_y / max(qe, 1)))}
+
+
+@register_kernel("periodic")
+@dataclass(frozen=True)
+class Periodic(Kernel):
+    """Exp-sine-squared (MacKay) kernel, ARD per dim:
+    ``k = sf2 exp(−2 Σ_q sin²(π d_q / p_q) / ℓ_q²)``.  Psi statistics via
+    Gauss–Hermite quadrature (the sin² warp has no Gaussian closed form)."""
+
+    dims: tuple[int, ...] | None = None
+    quad_order: int = 11
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", _as_dims(self.dims))
+
+    def K(self, hyp, a, b):
+        ell2 = jnp.exp(2.0 * hyp["log_ell"])
+        per = jnp.exp(hyp["log_period"])
+        sf2 = jnp.exp(hyp["log_sf2"])
+        d = _sl(a, self.dims)[:, None, :] - _sl(b, self.dims)[None, :, :]
+        sin2 = jnp.sin(jnp.pi * d / per) ** 2
+        return sf2 * jnp.exp(-2.0 * jnp.sum(sin2 / ell2, axis=-1))
+
+    def kdiag(self, hyp, a):
+        sf2 = jnp.exp(hyp["log_sf2"])
+        return jnp.full(a.shape[:-1], sf2, dtype=a.dtype)
+
+    def psi0(self, hyp, mu, s):
+        del s
+        sf2 = jnp.exp(hyp["log_sf2"])
+        return jnp.full(mu.shape[:-1], sf2, dtype=mu.dtype)
+
+    def variance_scale(self, hyp):
+        return jnp.exp(hyp["log_sf2"])
+
+    def hyp_shapes(self, q):
+        qe = _q_eff(q, self.dims)
+        return {"log_sf2": (), "log_ell": (qe,), "log_period": (qe,)}
+
+    def default_hyp(self, q, var_y=1.0):
+        qe = _q_eff(q, self.dims)
+        return {"log_sf2": np.log(var_y), "log_ell": np.zeros((qe,)),
+                "log_period": np.zeros((qe,))}
+
+
+# -- combinators -------------------------------------------------------------
+
+def _sub(hyp: dict, i: int) -> dict:
+    return hyp[f"k{i}"]
+
+
+def _pairwise_disjoint(parts) -> bool:
+    """True when every child declares ``dims`` and no dim is shared — the
+    condition under which a diagonal q(X) makes the children independent
+    random functions of x, so cross-expectations factor."""
+    seen: set[int] = set()
+    for p in parts:
+        dims = getattr(p, "dims", None)
+        if dims is None:
+            return False
+        if seen & set(dims):
+            return False
+        seen |= set(dims)
+    return True
+
+
+@dataclass(frozen=True, init=False)
+class _Combinator(Kernel):
+    parts: tuple[Kernel, ...]
+    quad_order: int
+
+    def __init__(self, *parts: Kernel, quad_order: int = 11):
+        if len(parts) < 2:
+            raise ValueError(
+                f"{type(self).__name__} needs >= 2 child kernels, got "
+                f"{len(parts)}")
+        object.__setattr__(self, "parts", tuple(parts))
+        object.__setattr__(self, "quad_order", int(quad_order))
+
+    def support_dims(self, q):
+        dims: set[int] = set()
+        for p in self.parts:
+            dims |= set(p.support_dims(q))
+        return tuple(sorted(dims))
+
+    def hyp_shapes(self, q):
+        return {f"k{i}": p.hyp_shapes(q) for i, p in enumerate(self.parts)}
+
+    def to_spec(self):
+        return {"kind": self.kind,
+                "parts": [p.to_spec() for p in self.parts],
+                "quad_order": self.quad_order}
+
+
+@register_kernel("sum")
+@dataclass(frozen=True, init=False)
+class Sum(_Combinator):
+    """``k = Σ_i k_i``.  psi0/psi1 are exact by linearity; psi2 cross terms
+    factor (product-of-expectations) for disjoint-dims children, else the
+    composite runs the quadrature fallback."""
+
+    def K(self, hyp, a, b):
+        return sum(p.K(_sub(hyp, i), a, b) for i, p in enumerate(self.parts))
+
+    def kdiag(self, hyp, a):
+        return sum(p.kdiag(_sub(hyp, i), a)
+                   for i, p in enumerate(self.parts))
+
+    def psi0(self, hyp, mu, s):
+        return sum(p.psi0(_sub(hyp, i), mu, s)
+                   for i, p in enumerate(self.parts))
+
+    def psi1(self, hyp, z, mu, s):
+        return sum(p.psi1(_sub(hyp, i), z, mu, s)
+                   for i, p in enumerate(self.parts))
+
+    def psi2_per_point(self, hyp, z, mu, s):
+        if not _pairwise_disjoint(self.parts):
+            return psi2_per_point_quad(self, hyp, z, mu, s)
+        p1s = [p.psi1(_sub(hyp, i), z, mu, s)
+               for i, p in enumerate(self.parts)]
+        out = sum(p.psi2_per_point(_sub(hyp, i), z, mu, s)
+                  for i, p in enumerate(self.parts))
+        for i in range(len(self.parts)):
+            for j in range(i + 1, len(self.parts)):
+                cross = p1s[i][:, :, None] * p1s[j][:, None, :]
+                out = out + cross + jnp.swapaxes(cross, 1, 2)
+        return out
+
+    def analytic_psi(self):
+        return (all(p.analytic_psi() for p in self.parts)
+                and _pairwise_disjoint(self.parts))
+
+    def variance_scale(self, hyp):
+        return sum(p.variance_scale(_sub(hyp, i))
+                   for i, p in enumerate(self.parts))
+
+    def default_hyp(self, q, var_y=1.0):
+        share = var_y / len(self.parts)
+        return {f"k{i}": p.default_hyp(q, share)
+                for i, p in enumerate(self.parts)}
+
+
+@register_kernel("product")
+@dataclass(frozen=True, init=False)
+class Product(_Combinator):
+    """``k = Π_i k_i``.  All psi stats factor into per-child products for
+    pairwise-disjoint children (independent coordinates under diagonal
+    q(X)); overlapping children run the quadrature fallback."""
+
+    def K(self, hyp, a, b):
+        out = self.parts[0].K(_sub(hyp, 0), a, b)
+        for i, p in enumerate(self.parts[1:], start=1):
+            out = out * p.K(_sub(hyp, i), a, b)
+        return out
+
+    def kdiag(self, hyp, a):
+        out = self.parts[0].kdiag(_sub(hyp, 0), a)
+        for i, p in enumerate(self.parts[1:], start=1):
+            out = out * p.kdiag(_sub(hyp, i), a)
+        return out
+
+    def _prod(self, terms):
+        out = terms[0]
+        for t in terms[1:]:
+            out = out * t
+        return out
+
+    def psi0(self, hyp, mu, s):
+        if not _pairwise_disjoint(self.parts):
+            return psi0_quad(self, hyp, mu, s)
+        return self._prod([p.psi0(_sub(hyp, i), mu, s)
+                           for i, p in enumerate(self.parts)])
+
+    def psi1(self, hyp, z, mu, s):
+        if not _pairwise_disjoint(self.parts):
+            return psi1_quad(self, hyp, z, mu, s)
+        return self._prod([p.psi1(_sub(hyp, i), z, mu, s)
+                           for i, p in enumerate(self.parts)])
+
+    def psi2_per_point(self, hyp, z, mu, s):
+        if not _pairwise_disjoint(self.parts):
+            return psi2_per_point_quad(self, hyp, z, mu, s)
+        return self._prod([p.psi2_per_point(_sub(hyp, i), z, mu, s)
+                           for i, p in enumerate(self.parts)])
+
+    def analytic_psi(self):
+        return (all(p.analytic_psi() for p in self.parts)
+                and _pairwise_disjoint(self.parts))
+
+    def variance_scale(self, hyp):
+        return self._prod([p.variance_scale(_sub(hyp, i))
+                           for i, p in enumerate(self.parts)])
+
+    def default_hyp(self, q, var_y=1.0):
+        share = var_y ** (1.0 / len(self.parts))
+        return {f"k{i}": p.default_hyp(q, share)
+                for i, p in enumerate(self.parts)}
+
+
+# -- defaults & dispatch helpers ---------------------------------------------
+
+SE_ARD = SEARD()
+
+
+def default_kernel() -> SEARD:
+    """The repo-wide default covariance (the paper's SE-ARD, full width)."""
+    return SE_ARD
+
+
+def as_kernel(kernel) -> Kernel:
+    """Normalise a ``kernel=`` argument: None -> SE-ARD default; a spec
+    string/dict -> parsed expression; an expression -> itself."""
+    if kernel is None:
+        return SE_ARD
+    if isinstance(kernel, Kernel):
+        return kernel
+    if isinstance(kernel, (str, dict)):
+        return kernel_from_spec(kernel)
+    raise TypeError(f"not a kernel expression: {kernel!r}")
+
+
+def is_fused_se(kernel) -> bool:
+    """True when ``kernel`` is the full-width SE-ARD — the expression the
+    fused Pallas kernels (reg_stats / psi_stats / predict) specialise; the
+    ops-level dispatch shims keep the fast path exactly for this case and
+    fall back to the XLA expression path otherwise."""
+    kernel = as_kernel(kernel)
+    return isinstance(kernel, SEARD) and kernel.dims is None
+
+
+def kernel_from_spec(spec: str | dict) -> Kernel:
+    """Inverse of ``Kernel.to_spec()``.  Accepts the JSON string form, and a
+    bare kind name ("se", "matern32", ...) as config-file shorthand for
+    that primitive at its defaults."""
+    if isinstance(spec, str):
+        spec = json.loads(spec) if spec.lstrip().startswith(
+            ("{", "[")) else {"kind": spec}
+    spec = dict(spec)
+    kind = spec.pop("kind")
+    try:
+        cls = _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel kind {kind!r}; registered: {kernel_names()}"
+        ) from None
+    if issubclass(cls, _Combinator):
+        parts = [kernel_from_spec(p) for p in spec.pop("parts")]
+        return cls(*parts, **spec)
+    if spec.get("dims") is not None:
+        spec["dims"] = tuple(spec["dims"])
+    return cls(**spec)
+
+
+def full_hyp_shapes(kernel: Kernel, q: int) -> dict:
+    """The model-level hyper-parameter shape tree: the expression's subtree
+    plus the noise precision (checkpoint restore templates)."""
+    return {**as_kernel(kernel).hyp_shapes(q), "log_beta": ()}

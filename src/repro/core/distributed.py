@@ -148,8 +148,16 @@ class DistributedGP:
         chunk_size: int | None = None,
         kernel_backend: str = "xla",
         batch_blocks: int | None = None,
+        kernel=None,
     ):
-        """``chunk_size``: if set, each shard's map streams its rows in
+        """``kernel``: the covariance expression (``core.covariance``;
+        None = SE-ARD).  Threaded through the shard-local map and the
+        replicated global bound; the Pallas backend keeps its fused fast
+        path for the SE-ARD default and falls back to the XLA map for
+        other expressions (the ops-layer shims assert nothing — parity is
+        covered by tests/test_kernel_zoo.py).
+
+        ``chunk_size``: if set, each shard's map streams its rows in
         blocks of this many points (see the module docstring's streaming
         memory model); ``None`` (default) keeps the monolithic
         all-rows-at-once map.
@@ -185,11 +193,14 @@ class DistributedGP:
         if kernel_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
+        from .covariance import as_kernel
+        self.kernel = as_kernel(kernel)
         if kernel_backend == "pallas":
             from ..kernels.psi_stats import psi2_fn_for_engine
             from ..kernels.reg_stats import reg_stats_fn_for_engine
-            psi2_fn = psi2_fn or psi2_fn_for_engine()
-            reg_stats_fn = reg_stats_fn or reg_stats_fn_for_engine()
+            psi2_fn = psi2_fn or psi2_fn_for_engine(kernel=self.kernel)
+            reg_stats_fn = reg_stats_fn or reg_stats_fn_for_engine(
+                kernel=self.kernel)
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.latent = latent
@@ -230,6 +241,7 @@ class DistributedGP:
             weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
             reg_stats_fn=self.reg_stats_fn, block_size=self.chunk_size,
             batch_blocks=None if exact else self.batch_blocks, key=key,
+            kernel=self.kernel,
         )
 
     def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d, key=None):
@@ -266,7 +278,7 @@ class DistributedGP:
             )
         else:  # "drop" (paper) — keep sums as-is, n-terms use the full n
             st = st._replace(n=n_full)
-        return collapsed_bound(hyp, z, st, d)
+        return collapsed_bound(hyp, z, st, d, kernel=self.kernel)
 
     def bound_fn(self, d: int):
         """Replicated-output distributed bound.
@@ -358,7 +370,7 @@ class DistributedGP:
         if fmask is None:
             fmask = jnp.ones((self.n_shards,))
         st = self._stats_prog(hyp, z, y, mu, s, w, fmask)
-        return extract_state(hyp, z, st, jitter=jitter)
+        return extract_state(hyp, z, st, jitter=jitter, kernel=self.kernel)
 
     def predict_engine(self, state, block_size: int = 256,
                        kernel_backend: str | None = None,

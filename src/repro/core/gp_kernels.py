@@ -16,31 +16,68 @@ paper's unifying view of sparse GP regression as a zero-variance GPLVM.
 
 Hyper-parameters are carried in log-space for unconstrained optimisation:
 ``hyp = {"log_sf2": (), "log_ell": (q,), "log_beta": ()}``.
+
+The canonical names are now ``se_kernel`` / ``se_kdiag`` / ``se_psi0`` /
+``se_psi1`` / ``se_psi2`` — the SE-ARD entry of the compositional kernel
+layer (``core.covariance``).  The old ``ard_*`` / bare ``psi*`` names remain
+as thin deprecation wrappers so existing code, tests, and checkpoints keep
+working unchanged.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
 
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
+    warnings.warn(
+        f"repro.core.gp_kernels.{old} is deprecated; use "
+        f"gp_kernels.{new} or a covariance.SEARD kernel expression",
+        DeprecationWarning, stacklevel=3)
+
 
 def sqdist(a: Array, b: Array) -> Array:
-    """Pairwise squared distances between rows of ``a`` (n,q) and ``b`` (m,q)."""
-    a2 = jnp.sum(a * a, axis=-1)[:, None]
-    b2 = jnp.sum(b * b, axis=-1)[None, :]
-    # Clamp: the expanded form can go slightly negative in floating point.
-    return jnp.maximum(a2 + b2 - 2.0 * a @ b.T, 0.0)
+    """Pairwise squared distances between rows of ``a`` (n,q) and ``b`` (m,q).
+
+    Computed in the input dtype via the expanded form — but *symmetrised*
+    first: both operands are shifted by a common (gradient-stopped) anchor
+    before expanding.  Squared distances are shift-invariant, and the shift
+    removes the catastrophic cancellation the raw ``a²+b²-2ab`` form suffers
+    for large-magnitude inputs (offset 1e4 ⇒ a²≈1e8, so f64 rounding of the
+    cross term swamps O(1) distances).  Clamped after expansion: the form
+    can still go slightly negative in floating point.
+
+    The anchor is ``b``'s first row — NOT a batch mean — so each output row
+    depends only on its own inputs: row-locality keeps chunked stats
+    bitwise-equal to monolithic ones and padded serving batches
+    bitwise-equal to unpadded ones (pad rows must never leak).
+    """
+    c = (jax.lax.stop_gradient(b[0]) if b.shape[0]
+         else jnp.zeros(b.shape[-1:], b.dtype))
+    ac = a - c
+    bc = b - c
+    a2 = jnp.sum(ac * ac, axis=-1)[:, None]
+    b2 = jnp.sum(bc * bc, axis=-1)[None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * ac @ bc.T, 0.0)
 
 
-def ard_kernel(hyp: dict, a: Array, b: Array) -> Array:
+def se_kernel(hyp: dict, a: Array, b: Array) -> Array:
     """K_ab for the SE-ARD kernel; a: (n,q), b: (m,q) -> (n,m)."""
     ell = jnp.exp(hyp["log_ell"])  # (q,)
     sf2 = jnp.exp(hyp["log_sf2"])
     return sf2 * jnp.exp(-0.5 * sqdist(a / ell, b / ell))
 
 
-def ard_kdiag(hyp: dict, a: Array) -> Array:
+def se_kdiag(hyp: dict, a: Array) -> Array:
     """diag(K_aa) — constant sf2 for the SE kernel."""
     sf2 = jnp.exp(hyp["log_sf2"])
     return jnp.full(a.shape[:-1], sf2, dtype=a.dtype)
@@ -50,14 +87,14 @@ def ard_kdiag(hyp: dict, a: Array) -> Array:
 # Psi statistics (closed form, SE-ARD, diagonal Gaussian q(X))
 # ---------------------------------------------------------------------------
 
-def psi0(hyp: dict, mu: Array, s: Array) -> Array:
+def se_psi0(hyp: dict, mu: Array, s: Array) -> Array:
     """<k(x_i,x_i)> per point: (n,). For SE this is sf2 regardless of q(X)."""
     del s
     sf2 = jnp.exp(hyp["log_sf2"])
     return jnp.full(mu.shape[:-1], sf2, dtype=mu.dtype)
 
 
-def psi1(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
+def se_psi1(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
     """<k(x_i, z_m)>: (n, m).
 
     Psi1[i,m] = sf2 * prod_q (1 + S_iq/l_q^2)^(-1/2)
@@ -73,7 +110,7 @@ def psi1(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
     return sf2 * jnp.exp(lognorm[:, None] + expo)
 
 
-def psi2(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
+def se_psi2(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
     """Sum_i <k(x_i,z_m) k(x_i,z_m')>: (m, m) — the D statistic of the paper.
 
     Per point:
@@ -84,12 +121,45 @@ def psi2(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
     return jnp.sum(psi2_per_point(hyp, z, mu, s), axis=0)
 
 
+# ---------------------------------------------------------------------------
+# Deprecated aliases (pre-compositional-kernel API; warn once, then delegate)
+# ---------------------------------------------------------------------------
+
+def ard_kernel(hyp: dict, a: Array, b: Array) -> Array:
+    """Deprecated alias of :func:`se_kernel`."""
+    _warn_deprecated("ard_kernel", "se_kernel")
+    return se_kernel(hyp, a, b)
+
+
+def ard_kdiag(hyp: dict, a: Array) -> Array:
+    """Deprecated alias of :func:`se_kdiag`."""
+    _warn_deprecated("ard_kdiag", "se_kdiag")
+    return se_kdiag(hyp, a)
+
+
+def psi0(hyp: dict, mu: Array, s: Array) -> Array:
+    """Deprecated alias of :func:`se_psi0`."""
+    _warn_deprecated("psi0", "se_psi0")
+    return se_psi0(hyp, mu, s)
+
+
+def psi1(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
+    """Deprecated alias of :func:`se_psi1`."""
+    _warn_deprecated("psi1", "se_psi1")
+    return se_psi1(hyp, z, mu, s)
+
+
+def psi2(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
+    """Deprecated alias of :func:`se_psi2`."""
+    _warn_deprecated("psi2", "se_psi2")
+    return se_psi2(hyp, z, mu, s)
+
+
 def psi2_per_point(hyp: dict, z: Array, mu: Array, s: Array) -> Array:
     """(n, m, m) un-summed psi2 — used by tests and the per-point oracle."""
     ell2 = jnp.exp(2.0 * hyp["log_ell"])  # (q,)
     sf2 = jnp.exp(hyp["log_sf2"])
     n, q = mu.shape
-    m = z.shape[0]
     # Static term: -(z_m - z_m')^2 / (4 l^2), summed over q -> (m, m)
     dz = z[:, None, :] - z[None, :, :]
     static = -0.25 * jnp.sum(dz * dz / ell2, axis=-1)  # (m, m)

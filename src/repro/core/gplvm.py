@@ -22,6 +22,7 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from . import bound as bound_mod
+from . import covariance as cov
 from . import init_utils
 from .scg import scg
 from .stats import partial_stats_chunked
@@ -45,18 +46,20 @@ class BayesianGPLVM:
     def __init__(self, y: np.ndarray, q: int, num_inducing: int = 50,
                  jitter: float = 1e-6, seed: int = 0, s0: float = 0.5,
                  chunk_size: int | None = None,
-                 batch_blocks: int | None = None):
+                 batch_blocks: int | None = None,
+                 kernel=None):
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.d = y.shape
         self.q = q
         self.jitter = jitter
         self.chunk_size = chunk_size
         self.batch_blocks = batch_blocks
+        self.kernel = cov.as_kernel(kernel)
         mu0 = init_utils.pca(np.asarray(y), q)
         z0 = init_utils.kmeans(mu0, num_inducing, seed=seed)
-        hyp0 = init_utils.default_hyp(np.asarray(y), q)
+        hyp0 = init_utils.default_hyp_for(self.kernel, np.asarray(y), q)
         self.params = {
-            "hyp": {k: jnp.asarray(v, jnp.float64) for k, v in hyp0.items()},
+            "hyp": jax.tree.map(lambda v: jnp.asarray(v, jnp.float64), hyp0),
             "z": jnp.asarray(z0, jnp.float64),
             "mu": jnp.asarray(mu0, jnp.float64),
             "log_s": jnp.full((self.n, q), np.log(s0), jnp.float64),
@@ -68,7 +71,8 @@ class BayesianGPLVM:
                 params["hyp"], params["z"], y_,
                 params["mu"], jnp.exp(params["log_s"]))
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
-                                              self.d, jitter=self.jitter)
+                                              self.d, jitter=self.jitter,
+                                              kernel=self.kernel)
 
         self._neg_vg = jax.jit(jax.value_and_grad(neg_bound))
         # Partial value+grads for the alternating (paper) schedule.
@@ -80,7 +84,8 @@ class BayesianGPLVM:
     def _map_stats(self, hyp, z, y, mu, s, batch_blocks=None, key=None):
         return partial_stats_chunked(hyp, z, y, mu, s=s, latent=True,
                                      block_size=self.chunk_size,
-                                     batch_blocks=batch_blocks, key=key)
+                                     batch_blocks=batch_blocks, key=key,
+                                     kernel=self.kernel)
 
     def log_bound(self, params=None) -> float:
         params = self.params if params is None else params
@@ -137,7 +142,8 @@ class BayesianGPLVM:
                                  params["mu"], jnp.exp(params["log_s"]),
                                  batch_blocks=bb, key=key)
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
-                                              self.d, jitter=self.jitter)
+                                              self.d, jitter=self.jitter,
+                                              kernel=self.kernel)
 
         res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
                       jax.random.PRNGKey(seed), steps=steps, lr=lr)
@@ -190,7 +196,8 @@ class BayesianGPLVM:
 
     def qu(self) -> bound_mod.QU:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],
-                                    self._stats(), jitter=self.jitter)
+                                    self._stats(), jitter=self.jitter,
+                                    kernel=self.kernel)
 
     def predictive_state(self):
         """The frozen ``serve.PredictiveState`` for the current params —
@@ -215,7 +222,15 @@ class BayesianGPLVM:
                              kernel_backend=kernel_backend, donate=donate)
 
     def ard_weights(self) -> np.ndarray:
-        """1/ell^2 — the per-dimension relevance the paper inspects (fig 4/7)."""
+        """1/ell^2 — the per-dimension relevance the paper inspects (fig 4/7).
+
+        Defined for lengthscale kernels (a top-level ``log_ell``); composite
+        or lengthscale-free expressions raise."""
+        if "log_ell" not in self.params["hyp"]:
+            raise ValueError(
+                "ard_weights needs a kernel with top-level ARD lengthscales "
+                f"(hyp has {sorted(self.params['hyp'])}); inspect the "
+                "expression's own subtree instead")
         return np.asarray(jnp.exp(-2.0 * self.params["hyp"]["log_ell"]))
 
     def latent_mean(self) -> np.ndarray:

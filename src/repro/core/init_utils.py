@@ -46,3 +46,15 @@ def default_hyp(y: np.ndarray, q: int) -> dict:
         "log_ell": np.ones((q,)) * 0.5 * np.log(q),
         "log_beta": -np.log(0.01 * var_y),
     }
+
+
+def default_hyp_for(kernel, y: np.ndarray, q: int) -> dict:
+    """Data-driven init for any covariance expression: the kernel's own
+    parameter subtree plus the model-level noise precision.  Reproduces
+    :func:`default_hyp` exactly for the SE-ARD default."""
+    from .covariance import as_kernel
+
+    var_y = float(np.var(y))
+    var_y = var_y if var_y > 0 else 1.0
+    return {**as_kernel(kernel).default_hyp(q, var_y),
+            "log_beta": -np.log(0.01 * var_y)}

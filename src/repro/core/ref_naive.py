@@ -7,55 +7,61 @@
   computed WITHOUT the paper's re-parametrisation. The re-parametrised
   collapsed bound must match this to float precision — that is the paper's
   exactness claim ("inference using the original guarantees").
+
+All oracles take an optional ``kernel`` expression (``core.covariance``;
+None = SE-ARD) so the exactness claim can be checked for any covariance.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
-from . import gp_kernels as gpk
+from . import covariance as cov
 
 
-def exact_lml(hyp: dict, x, y, jitter: float = 1e-8):
+def exact_lml(hyp: dict, x, y, jitter: float = 1e-8, kernel=None):
     """log N(Y; 0, K + beta^-1 I), summed over the d output dims."""
+    kernel = cov.as_kernel(kernel)
     n, d = y.shape
     beta = jnp.exp(hyp["log_beta"])
-    k = gpk.ard_kernel(hyp, x, x) + (1.0 / beta + jitter) * jnp.eye(n, dtype=x.dtype)
+    k = kernel.K(hyp, x, x) + (1.0 / beta + jitter) * jnp.eye(n, dtype=x.dtype)
     L = jnp.linalg.cholesky(k)
     alpha = jsl.solve_triangular(L, y, lower=True)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
     return -0.5 * d * n * jnp.log(2.0 * jnp.pi) - 0.5 * d * logdet - 0.5 * jnp.sum(alpha * alpha)
 
 
-def titsias_bound_direct(hyp: dict, x, y, z, jitter: float = 1e-6):
+def titsias_bound_direct(hyp: dict, x, y, z, jitter: float = 1e-6, kernel=None):
     """Titsias (2009) regression bound, computed the pre-paper way."""
+    kernel = cov.as_kernel(kernel)
     n, d = y.shape
     m = z.shape[0]
     beta = jnp.exp(hyp["log_beta"])
-    sf2 = jnp.exp(hyp["log_sf2"])
-    kmm = gpk.ard_kernel(hyp, z, z) + (jitter * sf2 + 1e-12) * jnp.eye(m, dtype=x.dtype)
-    knm = gpk.ard_kernel(hyp, x, z)
+    vs = kernel.variance_scale(hyp)
+    kmm = kernel.K(hyp, z, z) + (jitter * vs + 1e-12) * jnp.eye(m, dtype=x.dtype)
+    knm = kernel.K(hyp, x, z)
     L = jnp.linalg.cholesky(kmm)
     v = jsl.solve_triangular(L, knm.T, lower=True)        # (m, n); Qnn = v^T v
     qnn = v.T @ v
-    cov = qnn + (1.0 / beta) * jnp.eye(n, dtype=x.dtype)
-    Lc = jnp.linalg.cholesky(cov + jitter * jnp.eye(n, dtype=x.dtype))
+    covn = qnn + (1.0 / beta) * jnp.eye(n, dtype=x.dtype)
+    Lc = jnp.linalg.cholesky(covn + jitter * jnp.eye(n, dtype=x.dtype))
     alpha = jsl.solve_triangular(Lc, y, lower=True)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(Lc)))
     fit = -0.5 * d * n * jnp.log(2.0 * jnp.pi) - 0.5 * d * logdet - 0.5 * jnp.sum(alpha * alpha)
-    trace_term = -0.5 * beta * d * (n * sf2 - jnp.trace(qnn))
+    trace_term = -0.5 * beta * d * (jnp.sum(kernel.kdiag(hyp, x)) - jnp.trace(qnn))
     return fit + trace_term
 
 
-def exact_predict(hyp: dict, x, y, xstar, jitter: float = 1e-8):
+def exact_predict(hyp: dict, x, y, xstar, jitter: float = 1e-8, kernel=None):
     """Exact GP posterior mean/var at xstar (for small-n comparisons)."""
+    kernel = cov.as_kernel(kernel)
     n = x.shape[0]
     beta = jnp.exp(hyp["log_beta"])
-    k = gpk.ard_kernel(hyp, x, x) + (1.0 / beta + jitter) * jnp.eye(n, dtype=x.dtype)
+    k = kernel.K(hyp, x, x) + (1.0 / beta + jitter) * jnp.eye(n, dtype=x.dtype)
     L = jnp.linalg.cholesky(k)
-    ks = gpk.ard_kernel(hyp, xstar, x)                    # (t, n)
+    ks = kernel.K(hyp, xstar, x)                          # (t, n)
     a = jsl.solve_triangular(L, ks.T, lower=True)
     alpha = jsl.solve_triangular(L, y, lower=True)
     mean = a.T @ alpha
-    var = gpk.ard_kdiag(hyp, xstar) - jnp.sum(a * a, axis=0)
+    var = kernel.kdiag(hyp, xstar) - jnp.sum(a * a, axis=0)
     return mean, var

@@ -16,13 +16,20 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from . import bound as bound_mod
+from . import covariance as cov
 from . import init_utils
 from .scg import scg
 from .stats import partial_stats_chunked
 
 
 class SGPR:
-    """Sparse GP regression with SE-ARD kernel and inducing points Z.
+    """Sparse GP regression with inducing points Z and a pluggable
+    covariance expression (``kernel=``; default SE-ARD, the paper's).
+
+    ``kernel``: any ``core.covariance`` expression — a primitive
+    (``SEARD``/``Matern32``/``Linear``/``Periodic``) or a ``Sum``/
+    ``Product`` composition, or a spec string/dict.  Hyper-parameter init
+    adapts to the expression's parameter tree.
 
     ``chunk_size``: if set, the map step streams the n rows in blocks of
     this many points (``stats.partial_stats_chunked``) so peak memory is
@@ -30,7 +37,9 @@ class SGPR:
 
     ``kernel_backend``: "xla" (default) or "pallas" — the latter fuses the
     map's kernel-slab evaluation and both contractions into one Pallas pass
-    (``kernels.reg_stats``), so the (n, m) slab never round-trips HBM.
+    (``kernels.reg_stats``), so the (n, m) slab never round-trips HBM.  The
+    fused kernel is specialised to SE-ARD; for any other expression the
+    shim transparently falls back to the XLA map (docs/kernels.md).
 
     ``batch_blocks``: default minibatch size (in blocks of ``chunk_size``
     rows) for :meth:`fit_svi` — the stochastic trainer whose per-step cost
@@ -43,7 +52,8 @@ class SGPR:
                  jitter: float = 1e-6, seed: int = 0,
                  chunk_size: int | None = None,
                  kernel_backend: str = "xla",
-                 batch_blocks: int | None = None):
+                 batch_blocks: int | None = None,
+                 kernel=None):
         self.x = jnp.asarray(x, jnp.float64)
         self.y = jnp.asarray(y, jnp.float64)
         self.n, self.q = x.shape
@@ -51,19 +61,21 @@ class SGPR:
         self.jitter = jitter
         self.chunk_size = chunk_size
         self.batch_blocks = batch_blocks
+        self.kernel = cov.as_kernel(kernel)
         if kernel_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
         self.kernel_backend = kernel_backend
         if kernel_backend == "pallas":
             from ..kernels.reg_stats import reg_stats_fn_for_engine
-            self._reg_stats_fn = reg_stats_fn_for_engine()
+            self._reg_stats_fn = reg_stats_fn_for_engine(kernel=self.kernel)
         else:
             self._reg_stats_fn = None
         z0 = init_utils.kmeans(np.asarray(x), num_inducing, seed=seed) if z is None else z
-        hyp0 = init_utils.default_hyp(np.asarray(y), self.q) if hyp is None else hyp
+        hyp0 = (init_utils.default_hyp_for(self.kernel, np.asarray(y), self.q)
+                if hyp is None else hyp)
         self.params = {
-            "hyp": {k: jnp.asarray(v, jnp.float64) for k, v in hyp0.items()},
+            "hyp": jax.tree.map(lambda v: jnp.asarray(v, jnp.float64), hyp0),
             "z": jnp.asarray(z0, jnp.float64),
         }
         self._stats_cache = None
@@ -73,7 +85,8 @@ class SGPR:
         def neg_bound(params, x_, y_):
             st = self._map_stats(params["hyp"], params["z"], y_, x_)
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st, self.d,
-                                              jitter=self.jitter)
+                                              jitter=self.jitter,
+                                              kernel=self.kernel)
 
         self._neg_vg = jax.jit(jax.value_and_grad(neg_bound))
 
@@ -81,7 +94,8 @@ class SGPR:
         return partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
                                      reg_stats_fn=self._reg_stats_fn,
                                      block_size=self.chunk_size,
-                                     batch_blocks=batch_blocks, key=key)
+                                     batch_blocks=batch_blocks, key=key,
+                                     kernel=self.kernel)
 
     # -- objective ----------------------------------------------------------
     def log_bound(self, params=None) -> float:
@@ -135,7 +149,8 @@ class SGPR:
             st = self._map_stats(params["hyp"], params["z"], self.y, self.x,
                                  batch_blocks=bb, key=key)
             return -bound_mod.collapsed_bound(params["hyp"], params["z"], st,
-                                              self.d, jitter=self.jitter)
+                                              self.d, jitter=self.jitter,
+                                              kernel=self.kernel)
 
         res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
                       jax.random.PRNGKey(seed), steps=steps, lr=lr)
@@ -163,7 +178,8 @@ class SGPR:
 
     def qu(self) -> bound_mod.QU:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],
-                                    self._stats(), jitter=self.jitter)
+                                    self._stats(), jitter=self.jitter,
+                                    kernel=self.kernel)
 
     def predictive_state(self):
         """The frozen ``serve.PredictiveState`` for the current params —

@@ -23,19 +23,22 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import gp_kernels as gpk
+from . import covariance as cov
 
 Array = jax.Array
 
 
-def reg_stats_dense(hyp: dict, z: Array, x: Array, y: Array, w: Array):
+def reg_stats_dense(hyp: dict, z: Array, x: Array, y: Array, w: Array,
+                    kernel: "cov.Kernel | None" = None):
     """Monolithic XLA regression statistics ``(b, C, D)`` — the canonical
     map math shared by :func:`partial_stats` (``s is None`` branch) and the
     fused Pallas op's custom_vjp backward (``kernels.reg_stats``).
     Materialises the (n, m) kernel slab; the fused kernel is the version
-    that does not."""
-    knm = gpk.ard_kernel(hyp, x, z)                            # (n, m)
-    b = jnp.sum(w * gpk.ard_kdiag(hyp, x))
+    that does not.  ``kernel`` picks the covariance expression (None =
+    SE-ARD, the pre-compositional default)."""
+    kernel = cov.as_kernel(kernel)
+    knm = kernel.K(hyp, x, z)                                  # (n, m)
+    b = jnp.sum(w * kernel.kdiag(hyp, x))
     c = knm.T @ (w[:, None] * y)                               # (m, d)
     d_stat = (knm * w[:, None]).T @ knm                        # (m, m)
     return b, c, d_stat
@@ -68,6 +71,7 @@ def partial_stats(
     latent: bool = True,
     psi2_fn=None,
     reg_stats_fn=None,
+    kernel: "cov.Kernel | None" = None,
 ) -> Stats:
     """Compute the shard-local statistics (the map function).
 
@@ -83,7 +87,12 @@ def partial_stats(
       reg_stats_fn: override for the regression (B, C, D) accumulation —
         ``fn(hyp, z, mu, y, w) -> (b, c, d)`` (e.g. the fused Pallas kernel,
         which never materialises the (n, m) slab in HBM).
+      kernel: covariance expression (``core.covariance``); None = SE-ARD.
+        Overrides *only* the default accumulations — an explicit
+        ``psi2_fn`` / ``reg_stats_fn`` hook is expected to already be
+        bound to the right kernel (the ops-layer shims do this).
     """
+    kernel = cov.as_kernel(kernel)
     n_k = y.shape[0]
     w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
 
@@ -91,17 +100,18 @@ def partial_stats(
         # Regression: q(X_i) is a delta at the observed inputs. Use the exact
         # kernel forms (cheaper + numerically exact) rather than S->0 limits.
         a = jnp.sum(w * jnp.sum(y * y, axis=-1))
-        fn = reg_stats_dense if reg_stats_fn is None else reg_stats_fn
-        b, c, d_stat = fn(hyp, z, mu, y, w)
+        if reg_stats_fn is None:
+            b, c, d_stat = reg_stats_dense(hyp, z, mu, y, w, kernel=kernel)
+        else:
+            b, c, d_stat = reg_stats_fn(hyp, z, mu, y, w)
         kl = jnp.zeros((), y.dtype)
     else:
         a = jnp.sum(w * jnp.sum(y * y, axis=-1))
-        b = jnp.sum(w * gpk.psi0(hyp, mu, s))
-        p1 = gpk.psi1(hyp, z, mu, s)                           # (n, m)
+        b = jnp.sum(w * kernel.psi0(hyp, mu, s))
+        p1 = kernel.psi1(hyp, z, mu, s)                        # (n, m)
         c = p1.T @ (w[:, None] * y)
         if psi2_fn is None:
-            p2 = gpk.psi2_per_point(hyp, z, mu, s)             # (n, m, m)
-            d_stat = jnp.einsum("i,iab->ab", w, p2)
+            d_stat = kernel.psi2(hyp, z, mu, s, w)
         else:
             d_stat = psi2_fn(hyp, z, mu, s, w)
         kl_i = 0.5 * jnp.sum(s + mu * mu - jnp.log(s) - 1.0, axis=-1)
@@ -146,6 +156,7 @@ def partial_stats_chunked(
     batch_blocks: int | None = None,
     key: Array | None = None,
     block_indices: Array | None = None,
+    kernel: "cov.Kernel | None" = None,
 ) -> Stats:
     """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
 
@@ -211,7 +222,7 @@ def partial_stats_chunked(
         # "subset" is the whole data, i.e. the exact statistics.
         return partial_stats(hyp, z, y, mu, s, weights=weights,
                              latent=latent, psi2_fn=psi2_fn,
-                             reg_stats_fn=reg_stats_fn)
+                             reg_stats_fn=reg_stats_fn, kernel=kernel)
 
     w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
     pad = (-n_k) % block_size
@@ -251,7 +262,7 @@ def partial_stats_chunked(
     def block_stats(yc, muc, sc, wc):
         return partial_stats(hyp, z, yc, muc, sc, weights=wc,
                              latent=latent, psi2_fn=psi2_fn,
-                             reg_stats_fn=reg_stats_fn)
+                             reg_stats_fn=reg_stats_fn, kernel=kernel)
 
     # The carry keeps every leaf at rank >= 1 (scalars as (1,)): rank-0 scan
     # residuals trip shard_map's residual promotion on some JAX versions

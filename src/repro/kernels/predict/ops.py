@@ -72,20 +72,37 @@ def predict_stats(hyp: dict, z, a_mean, g, x, block_t: int = 128,
 
 
 def predict_fn_for_engine(block_t: int = 128, block_m: int = 64,
-                          compute_dtype=None):
+                          compute_dtype=None, kernel=None):
     """Adapter matching serve.engine's per-block fn: (state, x) -> (mean, var).
 
     ``compute_dtype`` threads the engine's accumulation width into the tile
     dtype (see :func:`predict_stats`); outputs are returned in the query
     dtype either way.
+
+    Dispatch shim for the compositional kernel layer: the fused Pallas
+    kernel evaluates the SE-ARD cross-covariance in its tiles, so the
+    full-width SE-ARD expression (the default) gets the fast path; any
+    other expression falls back to the XLA serving math
+    (``serve.posterior.predict_mean_var``) — same per-block contract.
     """
+    from ...core.covariance import as_kernel, is_fused_se
+
+    kernel = as_kernel(kernel)
     cdt = None if compute_dtype is None else jnp.dtype(compute_dtype)
+
+    if not is_fused_se(kernel):
+        def fn(state, x):
+            from ...serve.posterior import predict_mean_var
+            mean, var = predict_mean_var(state, x)
+            return mean.astype(x.dtype), var.astype(x.dtype)
+
+        return fn
 
     def fn(state, x):
         mean, quad = predict_stats(state.hyp, state.z, state.a_mean, state.g,
                                    x, block_t=block_t, block_m=block_m,
                                    compute_dtype=cdt)
-        var = gpk.ard_kdiag(state.hyp, x) - quad
+        var = gpk.se_kdiag(state.hyp, x) - quad
         return mean.astype(x.dtype), var.astype(x.dtype)
 
     return fn

@@ -26,8 +26,6 @@ Tiling contract (enforced/padded by ops.py):
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

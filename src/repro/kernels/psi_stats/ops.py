@@ -95,10 +95,23 @@ def psi1(hyp: dict, z, mu, s, block_n: int = 256, block_m: int = 128,
     return out[:n, :m]
 
 
-def psi2_fn_for_engine(block_n: int = 128, block_m: int = 64):
-    """Adapter matching core.stats.partial_stats(psi2_fn=...) signature."""
+def psi2_fn_for_engine(block_n: int = 128, block_m: int = 64, kernel=None):
+    """Adapter matching core.stats.partial_stats(psi2_fn=...) signature.
 
-    def fn(hyp, z, mu, s, w):
-        return psi2(hyp, z, mu, s, w, block_n=block_n, block_m=block_m)
+    Dispatch shim for the compositional kernel layer: the fused Pallas
+    kernel computes the SE-ARD closed form, so the full-width SE-ARD
+    expression (the default) gets the fast path; any other expression runs
+    its own ``Kernel.psi2`` (analytic or quadrature) through XLA — same
+    signature, parity covered by tests/test_kernel_zoo.py.
+    """
+    from ...core.covariance import as_kernel, is_fused_se
+
+    kernel = as_kernel(kernel)
+    if is_fused_se(kernel):
+        def fn(hyp, z, mu, s, w):
+            return psi2(hyp, z, mu, s, w, block_n=block_n, block_m=block_m)
+    else:
+        def fn(hyp, z, mu, s, w):
+            return kernel.psi2(hyp, z, mu, s, w)
 
     return fn

@@ -82,10 +82,25 @@ def reg_stats(hyp: dict, z, x, y, w, block_n: int = 128, block_m: int = 64,
     return _reg_stats(block_n, block_m, interpret, hyp, z, x, y, w)
 
 
-def reg_stats_fn_for_engine(block_n: int = 128, block_m: int = 64):
-    """Adapter matching core.stats.partial_stats(reg_stats_fn=...) signature."""
+def reg_stats_fn_for_engine(block_n: int = 128, block_m: int = 64,
+                            kernel=None):
+    """Adapter matching core.stats.partial_stats(reg_stats_fn=...) signature.
 
-    def fn(hyp, z, x, y, w):
-        return reg_stats(hyp, z, x, y, w, block_n=block_n, block_m=block_m)
+    Dispatch shim for the compositional kernel layer: the fused Pallas
+    kernel is specialised to the full-width SE-ARD covariance, so that
+    expression (the default) gets the fast path; any other expression gets
+    a generic XLA fallback with identical signature and semantics (parity
+    asserted in tests/test_kernel_zoo.py).
+    """
+    from ...core.covariance import as_kernel, is_fused_se
+
+    kernel = as_kernel(kernel)
+    if is_fused_se(kernel):
+        def fn(hyp, z, x, y, w):
+            return reg_stats(hyp, z, x, y, w, block_n=block_n,
+                             block_m=block_m)
+    else:
+        def fn(hyp, z, x, y, w):
+            return reg_stats_dense(hyp, z, x, y, w, kernel=kernel)
 
     return fn

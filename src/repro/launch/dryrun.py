@@ -29,7 +29,7 @@ from repro.configs import SHAPES, all_configs, cells, GP_CONFIGS  # noqa: E402
 from repro.distributed import sharding as shlib  # noqa: E402
 from repro.launch.hlo_analyzer import analyze  # noqa: E402
 from repro.launch.hlo_stats import collective_bytes, cost_stats, memory_stats  # noqa: E402
-from repro.launch.mesh import gp_data_axes, make_gp_mesh, make_production_mesh  # noqa: E402
+from repro.launch.mesh import gp_data_axes, make_production_mesh  # noqa: E402
 from repro.train import steps  # noqa: E402
 
 ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"

@@ -14,8 +14,6 @@ import pathlib
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import all_configs
@@ -58,8 +56,6 @@ def main(argv=None):
 
     if args.compress_grads:
         # carry error-feedback state inside the step (functional)
-        base = steps.make_train_step(cfg, adam_cfg)
-
         def step_fn(carry, batch):
             st, e = carry
 

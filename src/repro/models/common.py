@@ -7,7 +7,6 @@ parallel "spec tree" exists for the sharding rules. No framework magic.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

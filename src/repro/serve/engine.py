@@ -140,7 +140,8 @@ class PredictEngine:
             # one MXU-rows worth — for big scan blocks; min sublane is 8).
             block_t = min(128, block_size + (-block_size) % 8)
             self._block_fn = predict_fn_for_engine(
-                block_t=block_t, compute_dtype=self.compute_dtype)
+                block_t=block_t, compute_dtype=self.compute_dtype,
+                kernel=state.kernel)
         else:
             self._block_fn = posterior.predict_mean_var
 
@@ -309,6 +310,15 @@ def stack_states(states) -> posterior.PredictiveState:
     states = list(states)
     if not states:
         raise ValueError("stack_states needs at least one PredictiveState")
+    ref_kernel = states[0].kernel
+    for s in states[1:]:
+        # The kernel spec is static pytree metadata: a mismatch would
+        # surface as an opaque treedef error inside tree.map, so check it
+        # explicitly first.
+        if s.kernel != ref_kernel:
+            raise ValueError(
+                "all PredictiveStates must share one kernel expression to "
+                f"stack: {ref_kernel} vs {s.kernel}")
     ref_leaves = jax.tree.leaves(states[0])
     for s in states[1:]:
         for a, b in zip(ref_leaves, jax.tree.leaves(s)):

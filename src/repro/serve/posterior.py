@@ -30,23 +30,25 @@ sidecar pair without importing any training machinery state.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import pathlib
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from .. import checkpoint as ckpt
-from ..core import gp_kernels as gpk
+from ..core import covariance as cov
 from ..core.bound import DEFAULT_JITTER, _chol_kmm
 from ..core.stats import Stats
 
 Array = jax.Array
 
 
-class PredictiveState(NamedTuple):
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PredictiveState:
     """Everything prediction needs, none of it query-dependent.
 
     A frozen pytree: jit-traceable, psum/device_put-able, checkpointable.
@@ -54,15 +56,23 @@ class PredictiveState(NamedTuple):
     state can reconstruct ``optimal_qu`` quantities, e.g. for posterior
     sampling); ``a_mean``/``g`` are the precomputed serving contractions the
     engines actually use per query.
+
+    ``kernel`` is the covariance *expression* (``core.covariance``) — static
+    pytree metadata, not an array leaf, so the flattened checkpoint layout
+    is unchanged from the pre-compositional NamedTuple and old ``.npz``
+    files keep loading.  It rides in the sidecar as a spec string; a server
+    restores the right covariance with no model code.
     """
 
-    hyp: dict          # {"log_sf2": (), "log_ell": (q,), "log_beta": ()}
+    hyp: dict          # kernel expression's log-space tree + {"log_beta"}
     z: Array           # (m, q) inducing inputs
     chol_kmm: Array    # (m, m) L = chol(Kmm + jitter)
     chol_sigma: Array  # (m, m) LB = chol(I + b L^-1 D L^-T)
     c2: Array          # (m, d) LB^-1 L^-1 C (whitened info vector)
     a_mean: Array      # (m, d) b L^-T LB^-T c2
     g: Array           # (m, m) Kmm^-1 - Sigma^-1 (PSD explained-variance)
+    kernel: cov.Kernel = dataclasses.field(
+        default=cov.SE_ARD, metadata=dict(static=True))
 
     @property
     def m(self) -> int:
@@ -101,17 +111,20 @@ class PredictiveState(NamedTuple):
                        for a in jax.tree.leaves(self)))
 
 
-@functools.partial(jax.jit, static_argnames=())
+@functools.partial(jax.jit, static_argnames=("kernel",))
 def extract_state(hyp: dict, z: Array, stats: Stats,
-                  jitter: float = DEFAULT_JITTER) -> PredictiveState:
+                  jitter: float = DEFAULT_JITTER,
+                  kernel: cov.Kernel | None = None) -> PredictiveState:
     """One-time extraction: all query-independent factorizations and solves.
 
     Same math as ``core.bound.optimal_qu`` plus the two serving
     contractions.  O(m^3) once; afterwards every predict is O(t m (m + d)).
+    ``kernel`` (static; None = SE-ARD) is frozen into the state.
     """
+    kernel = cov.as_kernel(kernel)
     beta = jnp.exp(hyp["log_beta"])
     m = z.shape[0]
-    L = _chol_kmm(hyp, z, jitter)
+    L = _chol_kmm(hyp, z, jitter, kernel)
     LiD = jsl.solve_triangular(L, stats.D, lower=True)
     W = jsl.solve_triangular(L, LiD.T, lower=True).T
     Bmat = jnp.eye(m, dtype=z.dtype) + beta * W
@@ -127,15 +140,17 @@ def extract_state(hyp: dict, z: Array, stats: Stats,
     a_mean = beta * (v2 @ c2)
     g = v1 @ v1.T - v2 @ v2.T                            # Kmm^-1 - Sigma^-1
     return PredictiveState(hyp=hyp, z=z, chol_kmm=L, chol_sigma=LB, c2=c2,
-                           a_mean=a_mean, g=g)
+                           a_mean=a_mean, g=g, kernel=kernel)
 
 
 def state_from_model(model) -> PredictiveState:
     """Extract from a fitted sequential model (``SGPR``/``BayesianGPLVM``):
     runs the model's exact map-reduce once for the reduced Stats, then
-    :func:`extract_state`."""
+    :func:`extract_state`.  The model's covariance expression (``kernel``
+    attribute; SE-ARD when absent) is frozen into the state."""
     return extract_state(model.params["hyp"], model.params["z"],
-                         model._stats(), jitter=model.jitter)
+                         model._stats(), jitter=model.jitter,
+                         kernel=getattr(model, "kernel", None))
 
 
 # -- query-side math (the XLA serving path; engine.py scans it per block) ---
@@ -147,10 +162,10 @@ def predict_mean_var(state: PredictiveState, xstar: Array):
     for ``include_noise``.  Differentiable in ``xstar`` (plain jnp), which
     the GPLVM reconstruction path relies on.
     """
-    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)          # (t, m)
+    ksm = state.kernel.K(state.hyp, xstar, state.z)          # (t, m)
     mean = ksm @ state.a_mean
     quad = jnp.sum((ksm @ state.g) * ksm, axis=1)
-    var = gpk.ard_kdiag(state.hyp, xstar) - quad
+    var = state.kernel.kdiag(state.hyp, xstar) - quad
     return mean, var
 
 
@@ -160,11 +175,11 @@ def predict_full_cov(state: PredictiveState, xstar: Array):
     Cross-covariances couple every query pair, so this is computed in one
     piece rather than through the block engine — the small-t mode.
     """
-    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)
+    ksm = state.kernel.K(state.hyp, xstar, state.z)
     mean = ksm @ state.a_mean
-    kss = gpk.ard_kernel(state.hyp, xstar, xstar)
-    cov = kss - ksm @ state.g @ ksm.T
-    return mean, cov
+    kss = state.kernel.K(state.hyp, xstar, xstar)
+    covm = kss - ksm @ state.g @ ksm.T
+    return mean, covm
 
 
 # -- posterior sampling -----------------------------------------------------
@@ -179,29 +194,29 @@ def _mean_cov_from_factors(state: PredictiveState, xstar: Array):
     contraction cancels catastrophically — fine for a variance *diagonal*
     read once, fatal for a matrix that must stay PSD enough to factor.
     """
-    ksm = gpk.ard_kernel(state.hyp, xstar, state.z)
+    ksm = state.kernel.K(state.hyp, xstar, state.z)
     mean = ksm @ state.a_mean
     a1 = jsl.solve_triangular(state.chol_kmm, ksm.T, lower=True)
     a2 = jsl.solve_triangular(state.chol_sigma, a1, lower=True)
-    kss = gpk.ard_kernel(state.hyp, xstar, xstar)
-    cov = kss - a1.T @ a1 + a2.T @ a2
-    return mean, cov
+    kss = state.kernel.K(state.hyp, xstar, xstar)
+    covm = kss - a1.T @ a1 + a2.T @ a2
+    return mean, covm
 
 
-def _jittered_chol(state: PredictiveState, cov: Array, t: int,
+def _jittered_chol(state: PredictiveState, covm: Array, t: int,
                    jitter: float, include_noise: bool) -> Array:
-    """chol(cov + jitter·sf2·I [+ I/beta]) — the sampling factor.
+    """chol(cov + jitter·vs·I [+ I/beta]) — the sampling factor.
 
-    The jitter follows the ``_chol_kmm`` convention (scaled by the signal
-    variance so it is unit-free).  It also makes the factor well-defined on
-    padded query blocks, where the duplicated x=0 pad rows make ``cov``
-    exactly singular.
+    The jitter follows the ``_chol_kmm`` convention (scaled by the kernel's
+    signal variance so it is unit-free).  It also makes the factor
+    well-defined on padded query blocks, where the duplicated x=0 pad rows
+    make ``cov`` exactly singular.
     """
-    sf2 = jnp.exp(state.hyp["log_sf2"])
-    diag = jitter * sf2 + jnp.asarray(1e-12, cov.dtype)
+    vs = state.kernel.variance_scale(state.hyp)
+    diag = jitter * vs + jnp.asarray(1e-12, covm.dtype)
     if include_noise:
         diag = diag + jnp.exp(-state.hyp["log_beta"])
-    return jnp.linalg.cholesky(cov + diag * jnp.eye(t, dtype=cov.dtype))
+    return jnp.linalg.cholesky(covm + diag * jnp.eye(t, dtype=covm.dtype))
 
 
 def sample_block(state: PredictiveState, x_blk: Array, key: Array,
@@ -265,24 +280,28 @@ def save_state(path: str | pathlib.Path, state: PredictiveState,
                metadata: dict | None = None) -> pathlib.Path:
     """Atomic write via ``repro.checkpoint.save``; shape metadata rides in
     the sidecar so :func:`load_state` needs no template.  The keys
-    ``m``/``q``/``d``/``dtype`` are reserved for that restore template —
-    user ``metadata`` may not shadow them."""
-    reserved = {"m", "q", "d", "dtype"}
+    ``m``/``q``/``d``/``dtype``/``kernel`` are reserved for that restore
+    template — user ``metadata`` may not shadow them.  The covariance
+    expression serialises as its JSON spec, so a serving host rebuilds the
+    exact kernel with no model code."""
+    reserved = {"m", "q", "d", "dtype", "kernel"}
     clash = reserved & set(metadata or ())
     if clash:
         raise ValueError(
             f"metadata keys {sorted(clash)} are reserved for the restore "
             "template — rename them")
     meta = {**(metadata or {}), "m": state.m, "q": state.q, "d": state.d,
-            "dtype": str(state.z.dtype)}
+            "dtype": str(state.z.dtype), "kernel": state.kernel.to_spec()}
     return ckpt.save(path, state, metadata=meta)
 
 
 def load_state(path: str | pathlib.Path) -> tuple[PredictiveState, dict]:
     """Restore a :class:`PredictiveState` (plus user metadata) from disk.
 
-    Builds the restore template from the sidecar's (m, q, d) — no model, no
-    training data, no fitted object required on the serving host.
+    Builds the restore template from the sidecar's (m, q, d) and kernel
+    spec — no model, no training data, no fitted object required on the
+    serving host.  Pre-compositional checkpoints carry no ``kernel`` key
+    and restore as SE-ARD (what they were trained with).
     """
     import json
 
@@ -290,13 +309,18 @@ def load_state(path: str | pathlib.Path) -> tuple[PredictiveState, dict]:
     md = meta["metadata"]
     m, q, d = md["m"], md["q"], md["d"]
     dt = jnp.dtype(md.get("dtype", "float64"))
+    kernel = cov.kernel_from_spec(md.get("kernel", {"kind": "se"}))
 
     def sds(*shape):
         return jax.ShapeDtypeStruct(shape, dt)
 
+    def shape_tree(shapes):
+        return jax.tree.map(lambda sh: sds(*sh), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
     like = PredictiveState(
-        hyp={"log_sf2": sds(), "log_ell": sds(q), "log_beta": sds()},
+        hyp={**shape_tree(kernel.hyp_shapes(q)), "log_beta": sds()},
         z=sds(m, q), chol_kmm=sds(m, m), chol_sigma=sds(m, m),
-        c2=sds(m, d), a_mean=sds(m, d), g=sds(m, m))
+        c2=sds(m, d), a_mean=sds(m, d), g=sds(m, m), kernel=kernel)
     state, md_out = ckpt.restore(path, like)
-    return PredictiveState(*jax.tree.map(jnp.asarray, tuple(state))), md_out
+    return jax.tree.map(jnp.asarray, state), md_out

@@ -55,7 +55,8 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                        psi2_fn=None, reg_stats_fn=None,
                        chunk_size: int | None = None,
                        kernel_backend: str = "xla",
-                       batch_blocks: int | None = None, argnums=(0, 1)):
+                       batch_blocks: int | None = None, argnums=(0, 1),
+                       kernel=None):
     """Distributed GP map-reduce analogue of ``make_train_step``.
 
     Returns ``(engine, step)`` where ``step`` is the jitted
@@ -79,6 +80,10 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
     takes one extra trailing argument — a fresh ``jax.random.PRNGKey``:
     ``step(hyp, z, mu, s, y, w, fmask, n_full, key)`` — and returns an
     unbiased stochastic estimate (see docs/training.md).
+
+    ``kernel`` (default None = SE-ARD) picks the covariance expression
+    (``core.covariance``); ``hyp`` must then carry that expression's
+    parameter tree (``init_utils.default_hyp_for`` builds one).
     """
     from ..core.distributed import DistributedGP
 
@@ -86,7 +91,7 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                         failure_mode=failure_mode, psi2_fn=psi2_fn,
                         reg_stats_fn=reg_stats_fn, chunk_size=chunk_size,
                         kernel_backend=kernel_backend,
-                        batch_blocks=batch_blocks)
+                        batch_blocks=batch_blocks, kernel=kernel)
     return eng, eng.make_value_and_grad(d, argnums=argnums)
 
 
@@ -182,7 +187,6 @@ def batch_specs(cfg: ModelConfig, batch_sds) -> Any:
 
 def abstract_state(cfg: ModelConfig) -> tuple[dict, dict]:
     """(ShapeDtypeStruct train state, matching logical spec tree)."""
-    key = jax.random.PRNGKey(0)
     state_shapes = jax.eval_shape(
         functools.partial(_init_state_nokey, cfg))
     # spec tree must be built concretely (it is plain metadata)

@@ -1,6 +1,4 @@
 """Checkpoint/restore, failure masks, straggler stats, grad compression."""
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -9,13 +9,12 @@ import pathlib
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DistributedGP
 from repro.core.bound import collapsed_bound
-from repro.core.stats import Stats, partial_stats, reduce_stats
+from repro.core.stats import partial_stats, reduce_stats
 from repro.launch.mesh import make_compat_mesh
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]

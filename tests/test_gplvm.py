@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BayesianGPLVM, SGPR
+from repro.core import BayesianGPLVM
 from repro.core.bound import collapsed_bound
 from repro.core.stats import partial_stats
 from repro.data.synthetic import sines_dataset

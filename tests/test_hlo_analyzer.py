@@ -1,7 +1,6 @@
 """The trip-count-aware HLO analyzer vs known-flop programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analyzer import analyze
@@ -58,7 +57,6 @@ def test_nested_scan():
 
 def test_collectives_inside_scan_are_weighted():
     """A psum inside a scanned layer must count once per layer."""
-    import os
     # needs >1 device to emit a real collective; use the 1-device mesh —
     # XLA elides the all-reduce, so just assert the analyzer runs clean.
     x = jax.ShapeDtypeStruct((8, 8), jnp.float32)

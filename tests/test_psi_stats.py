@@ -1,5 +1,4 @@
 """Psi-statistic correctness: closed forms vs Monte-Carlo and limits."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

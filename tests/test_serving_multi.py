@@ -10,7 +10,6 @@ algebra exactly.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.stats import partial_stats

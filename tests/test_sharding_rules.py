@@ -1,6 +1,4 @@
 """Logical-axis sharding resolution (pure metadata, no devices needed)."""
-import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as sh

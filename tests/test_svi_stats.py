@@ -21,8 +21,7 @@ import pytest
 from repro.core import BayesianGPLVM, SGPR
 from repro.core.bound import collapsed_bound
 from repro.core.distributed import DistributedGP
-from repro.core.stats import (Stats, partial_stats_chunked,
-                              sample_block_indices)
+from repro.core.stats import partial_stats_chunked, sample_block_indices
 from repro.launch.mesh import make_compat_mesh
 
 from conftest import make_regression
