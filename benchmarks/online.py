@@ -1,0 +1,109 @@
+"""Online-update benchmark: incremental fold/refresh vs full rescan.
+
+The claim under test is the continual-learning cost model:
+
+  * absorbing a k-point block incrementally — ``stats.fold_stats`` on the
+    reduced statistics plus the rank-k factor refresh
+    (``serve.online.update_state``, O(m²k)) — costs the SAME regardless of
+    how many points the posterior already summarises (flat in n);
+  * the alternative, a retrain-style full rescan (re-map every point, then
+    refactorise: ``partial_stats`` + ``extract_state``), is linear in n;
+  * the refresh itself scales linearly in the block size k (the rank of
+    the Cholesky update), never cubically in m.
+
+Rows: ``online/update_n=...`` (incremental, swept over history size),
+``online/rescan_n=...`` (the full-rescan baseline over the same sweep, with
+the incremental speedup in the derived column), and ``online/refresh_k=...``
+(refresh cost vs block size).  The derived column of the last update row
+reports flatness: incremental time at the largest n over the smallest n
+(≈1 when the cost model holds; the rescan ratio grows like the data).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.stats import fold_stats, partial_stats
+from repro.serve import extract_state
+from repro.serve.online import update_state
+
+from .gp_common import default_hyp
+from .serving import _median_time
+
+
+def _posterior(rng, n, m, q, d):
+    hyp = default_hyp(q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return hyp, x, y, z, stats, extract_state(hyp, z, stats)
+
+
+def online_updates(q=3, d=2, m=48, k=32,
+                   n_sweep=(2_000, 8_000, 32_000, 128_000),
+                   k_sweep=(1, 8, 32, 128), iters=5):
+    """Update latency vs history size (incremental must stay flat while the
+    rescan grows linearly) and refresh cost vs block size k."""
+    rng = np.random.default_rng(11)
+    rows = []
+    xb = jnp.asarray(rng.standard_normal((k, q)))
+    yb = jnp.asarray(rng.standard_normal((k, d)))
+
+    # -- update latency vs history size n -----------------------------------
+    t_inc = {}
+    for n in n_sweep:
+        hyp, x, y, z, stats, state = _posterior(rng, n, m, q, d)
+        delta = partial_stats(hyp, z, yb, xb, s=None, latent=False)
+
+        def incremental():
+            folded = fold_stats(stats, delta)
+            res = update_state(state, xb, yb)
+            assert not res.fallback
+            return folded.C, res.state.chol_sigma
+
+        x_all = jnp.concatenate([x, xb])
+        y_all = jnp.concatenate([y, yb])
+
+        def rescan():
+            st = partial_stats(hyp, z, y_all, x_all, s=None, latent=False)
+            return extract_state(hyp, z, st).chol_sigma
+
+        # parity while we're here: both routes land on the same factors
+        np.testing.assert_allclose(
+            np.asarray(update_state(state, xb, yb).state.chol_sigma),
+            np.asarray(rescan()), rtol=1e-7, atol=1e-8)
+
+        incremental(); rescan()          # warm both compile caches
+        t_i = _median_time(incremental, iters)
+        t_r = _median_time(rescan, iters)
+        t_inc[n] = t_i
+        rows.append((f"online/update_n={n}", t_i * 1e6,
+                     f"incremental k={k} m={m}"))
+        rows.append((f"online/rescan_n={n}", t_r * 1e6,
+                     f"speedup={t_r / t_i:.1f}x"))
+        print(f"  n={n:>7}: incremental {t_i * 1e3:8.2f} ms   "
+              f"rescan {t_r * 1e3:8.2f} ms   ({t_r / t_i:6.1f}x)")
+
+    flat = t_inc[max(n_sweep)] / t_inc[min(n_sweep)]
+    rows.append((f"online/update_flatness_n={min(n_sweep)}..{max(n_sweep)}",
+                 flat, "incremental t(max n)/t(min n); ~1 = flat in history"))
+    print(f"  incremental flatness across {min(n_sweep)}->{max(n_sweep)}: "
+          f"{flat:.2f}x (rescan would be ~{max(n_sweep) / min(n_sweep)}x)")
+
+    # -- refresh cost vs block size k ---------------------------------------
+    n_fix = n_sweep[0]
+    _, _, _, _, _, state = _posterior(rng, n_fix, m, q, d)
+    for kk in k_sweep:
+        xk = jnp.asarray(rng.standard_normal((kk, q)))
+        yk = jnp.asarray(rng.standard_normal((kk, d)))
+        update_state(state, xk, yk)      # warm the per-(m, k) compile cache
+        t_k = _median_time(lambda: update_state(state, xk, yk).state.c2,
+                           iters)
+        rows.append((f"online/refresh_k={kk}", t_k * 1e6,
+                     f"{t_k / kk * 1e6:.1f} us/rank (m={m})"))
+        print(f"  k={kk:>4}: refresh {t_k * 1e3:8.2f} ms "
+              f"({t_k / kk * 1e6:8.1f} us per rank)")
+
+    return rows

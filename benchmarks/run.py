@@ -6,7 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
 import argparse
 import sys
 
-from . import figures, kernelzoo, serving, streaming
+from . import figures, kernelzoo, online, serving, streaming
 
 
 ALL = {
@@ -24,6 +24,7 @@ ALL = {
     "predict": serving.predict_serving,
     "serve_ext": serving.serving_extensions,
     "kernelzoo": kernelzoo.kernel_zoo,
+    "online": online.online_updates,
 }
 
 FAST_ARGS = {
@@ -45,6 +46,8 @@ FAST_ARGS = {
     "serve_ext": dict(n=4096, m=32, t=256, block=64, s_sweep=(1, 8, 32),
                       n_models_sweep=(1, 2, 4), iters=2),
     "kernelzoo": dict(n=4096, m=32, t=512, block=512, iters=2),
+    "online": dict(m=16, k=8, n_sweep=(1_000, 4_000), k_sweep=(1, 8),
+                   iters=2),
 }
 
 

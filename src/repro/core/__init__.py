@@ -4,27 +4,33 @@ inference for sparse GP regression and the Bayesian GPLVM.
 Public API:
   covariance     compositional kernel expressions + psi-stat dispatch
   gp_kernels     SE-ARD closed forms (the covariance layer's SE entry)
-  stats          per-shard partial sufficient statistics (the "map")
+  stats          per-shard partial sufficient statistics (the "map") plus
+                 the online fold/downdate (additive Stats across blocks)
   bound          collapsed bound (paper eq. 3.3), optimal q(u), prediction
+  chol_update    rank-k Cholesky update/downdate (O(m²k) online refresh)
   distributed    shard_map Map-Reduce engine (the "reduce" + global step)
   sgpr, gplvm    sequential model classes (GPy-analogue reference engines)
   scg            scaled conjugate gradient (Moller 1993)
   ref_naive      O(n^3) oracles for tests
 """
-from . import (bound, covariance, distributed, gp_kernels, init_utils,
-               ref_naive, scg, stats)
+from . import (bound, chol_update, covariance, distributed, gp_kernels,
+               init_utils, ref_naive, scg, stats)
 from .bound import QU, collapsed_bound, optimal_qu, predict
+from .chol_update import chol_downdate_rank_k, chol_update_rank_k
 from .covariance import (SEARD, Linear, Matern32, Periodic, Product, Sum,
                          kernel_from_spec)
 from .distributed import DistributedGP
 from .gplvm import BayesianGPLVM
 from .sgpr import SGPR
-from .stats import Stats, partial_stats, partial_stats_chunked, zero_stats
+from .stats import (Stats, downdate_stats, fold_stats, partial_stats,
+                    partial_stats_chunked, zero_stats)
 
 __all__ = [
-    "bound", "covariance", "distributed", "gp_kernels", "init_utils",
-    "ref_naive", "scg", "stats", "QU", "collapsed_bound", "optimal_qu",
-    "predict", "SEARD", "Matern32", "Linear", "Periodic", "Sum", "Product",
-    "kernel_from_spec", "DistributedGP", "BayesianGPLVM", "SGPR", "Stats",
-    "partial_stats", "partial_stats_chunked", "zero_stats",
+    "bound", "chol_update", "covariance", "distributed", "gp_kernels",
+    "init_utils", "ref_naive", "scg", "stats", "QU", "collapsed_bound",
+    "optimal_qu", "predict", "SEARD", "Matern32", "Linear", "Periodic",
+    "Sum", "Product", "kernel_from_spec", "DistributedGP", "BayesianGPLVM",
+    "SGPR", "Stats", "chol_downdate_rank_k", "chol_update_rank_k",
+    "downdate_stats", "fold_stats", "partial_stats",
+    "partial_stats_chunked", "zero_stats",
 ]

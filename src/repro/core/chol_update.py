@@ -1,0 +1,121 @@
+"""Rank-k Cholesky update/downdate — the O(m²k) serve-refresh primitive.
+
+Given a lower-triangular ``L`` with ``L Lᵀ = A`` and a factor ``V`` (m, k),
+compute the Cholesky factor of ``A ± V Vᵀ`` *without* refactorising the
+full m×m matrix: a sequence of k rank-1 sweeps (the LINPACK ``dchud`` /
+``dchdd`` Givens scheme), each an O(m²) ``lax.scan`` over columns.  This is
+what makes an online posterior refresh (``serve.online``) cost O(m²k) per
+ingested/forgotten block instead of the O(m³) of ``jnp.linalg.cholesky`` —
+no call to ``cholesky`` appears anywhere in this module (property-tested in
+tests/test_chol_update.py).
+
+Downdates can fail: ``A − V Vᵀ`` may be indefinite (removing a block that
+was never folded in), or positive-definite but so ill-conditioned that the
+sequential sweeps lose it in float error.  Both manifest the same way — a
+pivot update ``r² = d² − x²`` falls to (or below) a vanishing fraction of
+``d²``.  Rather than raise inside jitted code, every function returns an
+``ok`` flag alongside the factor; the sweep keeps going with a clamped
+pivot so shapes stay static, and the *caller* (``serve.online``) treats
+``ok=False`` as "fall back to a full refactorisation".  The threshold is
+relative (``cond_tol``), so it is also a condition-number guard: a downdate
+that technically succeeds but leaves ``r²/d² < cond_tol`` is flagged,
+because the incremental factor's forward error scales like 1/(r/d).
+
+Updates (``A + V Vᵀ``) always succeed mathematically (``r² ≥ d²``); they
+share the flag plumbing only so both directions present one API.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+# Relative pivot floor for downdates: trip the guard when a pivot would
+# shrink below sqrt(cond_tol) of its current magnitude.  1e-8 leaves ~8
+# decimal digits in the worst pivot at f64 — conservative, because the
+# caller's fallback is exact and cheap relative to serving traffic.
+DEFAULT_COND_TOL = 1e-8
+
+
+def _rank1_sweep(L: Array, x: Array, sign: float, cond_tol: float):
+    """One rank-1 pass: chol(L Lᵀ + sign·x xᵀ).  Returns ``(L', ok)``.
+
+    Column j's Givens (update) / hyperbolic (downdate) rotation is applied
+    to the trailing columns of ``x`` as a full-vector masked op, so the scan
+    is O(m) steps of O(m) work — O(m²) total, matching the dense flop count
+    of the classical algorithm.
+    """
+    m = L.shape[0]
+    rows = jnp.arange(m)
+
+    def body(carry, j):
+        Lc, xc, ok = carry
+        d = Lc[j, j]
+        xj = xc[j]
+        r2 = d * d + sign * xj * xj
+        # Guard: the pivot must stay a non-vanishing fraction of its old
+        # magnitude (always true for sign=+1).  Clamp so the sweep can
+        # finish with static shapes; the flag invalidates the result.
+        floor = cond_tol * d * d
+        ok = ok & (r2 > floor)
+        r = jnp.sqrt(jnp.maximum(r2, floor))
+        c = r / d
+        s = xj / d
+        below = rows > j
+        col = Lc[:, j]
+        new_col = jnp.where(below, (col + sign * s * xc) / c, col)
+        new_col = new_col.at[j].set(r)
+        xc = jnp.where(below, c * xc - s * new_col, xc)
+        Lc = Lc.at[:, j].set(new_col)
+        return (Lc, xc, ok), None
+
+    (L, _, ok), _ = lax.scan(body, (L, x, jnp.asarray(True)), rows)
+    return L, ok
+
+
+def chol_update_rank_k(L: Array, V: Array,
+                       cond_tol: float = DEFAULT_COND_TOL):
+    """``chol(L Lᵀ + V Vᵀ)`` in O(m²k).  Returns ``(L', ok)``.
+
+    ``V`` is (m, k) — e.g. ``√β L₀⁻¹ Knmᵀ diag(√w)`` for a newly folded
+    block of k points (``serve.online``).  Zero columns (padding rows with
+    zero weight) are exact no-ops.  ``ok`` is always True in exact
+    arithmetic; it is returned for API symmetry with the downdate.
+    """
+    return _rank_k(L, V, 1.0, cond_tol)
+
+
+def chol_downdate_rank_k(L: Array, V: Array,
+                         cond_tol: float = DEFAULT_COND_TOL):
+    """``chol(L Lᵀ − V Vᵀ)`` in O(m²k).  Returns ``(L', ok)``.
+
+    ``ok=False`` means the downdate is indefinite or too ill-conditioned to
+    trust (pivot ratio under ``cond_tol``); the returned factor is then a
+    clamped artefact and must be discarded in favour of a refactorisation.
+    """
+    return _rank_k(L, V, -1.0, cond_tol)
+
+
+def _rank_k(L: Array, V: Array, sign: float, cond_tol: float):
+    V = jnp.asarray(V, L.dtype)
+    if V.ndim == 1:
+        V = V[:, None]
+    return _rank_k_jit(L, V, sign, cond_tol)
+
+
+# Jitted at module level (sign/cond_tol static) so repeated refreshes with
+# the same (m, k) shapes reuse one compiled sweep — an eager lax.scan would
+# re-trace per call, swamping the O(m²k) math it exists to save.
+@functools.partial(jax.jit, static_argnames=("sign", "cond_tol"))
+def _rank_k_jit(L: Array, V: Array, sign: float, cond_tol: float):
+    def body(carry, v):
+        Lc, ok = carry
+        Lc, ok_i = _rank1_sweep(Lc, v, sign, cond_tol)
+        return (Lc, ok & ok_i), None
+
+    (L, ok), _ = lax.scan(body, (L, jnp.asarray(True)), V.T)
+    return L, ok

@@ -24,11 +24,12 @@ from jax.flatten_util import ravel_pytree
 from . import bound as bound_mod
 from . import covariance as cov
 from . import init_utils
+from .posterior_cache import PosteriorCacheMixin
 from .scg import scg
 from .stats import partial_stats_chunked
 
 
-class BayesianGPLVM:
+class BayesianGPLVM(PosteriorCacheMixin):
     """``chunk_size``: if set, the map step streams rows in blocks of this
     many points (``stats.partial_stats_chunked``), bounding peak memory at
     O(chunk_size * m^2) instead of the monolithic O(n * m^2) psi2 tensor —
@@ -64,7 +65,7 @@ class BayesianGPLVM:
             "mu": jnp.asarray(mu0, jnp.float64),
             "log_s": jnp.full((self.n, q), np.log(s0), jnp.float64),
         }
-        self._pstate_cache = None   # serve.PredictiveState (q(u) factor solves)
+        self._init_posterior_caches()   # stats / PredictiveState / engine
 
         def neg_bound(params, y_):
             st = self._map_stats(
@@ -110,7 +111,7 @@ class BayesianGPLVM:
 
         res = scg(fg, np.asarray(flat0, np.float64), max_iters=max_iters)
         self.params = jax.tree.map(jnp.asarray, unravel(jnp.asarray(res.x)))
-        self._pstate_cache = None
+        self._invalidate_posterior()
         if verbose:
             print(f"GPLVM fit(joint): bound={-res.f:.4f} iters={res.n_iters}")
         return res
@@ -148,7 +149,7 @@ class BayesianGPLVM:
         res = svi_fit(jax.jit(jax.value_and_grad(neg)), self.params,
                       jax.random.PRNGKey(seed), steps=steps, lr=lr)
         self.params = res.params
-        self._pstate_cache = None
+        self._invalidate_posterior()
         if verbose:
             print(f"GPLVM fit_svi: est. bound={-res.history[-1]:.4f} "
                   f"steps={res.n_steps} (B={bb} blocks/step)")
@@ -185,14 +186,16 @@ class BayesianGPLVM:
             if verbose:
                 print(f"  round {r}: bound={-res.f:.4f}")
         self.params = {**g, **l}
-        self._pstate_cache = None
+        self._invalidate_posterior()
         return res
 
     # -- posterior / diagnostics ---------------------------------------------
     def _stats(self):
-        return self._map_stats(
-            self.params["hyp"], self.params["z"], self.y,
-            self.params["mu"], jnp.exp(self.params["log_s"]))
+        if self._stats_cache is None:
+            self._stats_cache = self._map_stats(
+                self.params["hyp"], self.params["z"], self.y,
+                self.params["mu"], jnp.exp(self.params["log_s"]))
+        return self._stats_cache
 
     def qu(self) -> bound_mod.QU:
         return bound_mod.optimal_qu(self.params["hyp"], self.params["z"],

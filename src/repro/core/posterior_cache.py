@@ -1,0 +1,44 @@
+"""Shared posterior-cache bookkeeping for the sequential models.
+
+``SGPR`` and ``BayesianGPLVM`` both memoise the posterior chain — reduced
+Stats → ``PredictiveState`` (the q(u) factor solves) → the jitted default
+``PredictEngine`` holding that state — and every parameter- or
+data-mutating path (``fit``, ``fit_svi``, ``update``, ``forget``) must
+reset or refresh the whole chain together: a partially invalidated chain
+is a stale-serving bug (the regression tests in tests/test_online_updates.py
+pin this).  One mixin owns the attribute set so a new mutation path cannot
+forget a cache that the others clear.
+"""
+from __future__ import annotations
+
+
+class PosteriorCacheMixin:
+    """Owns the model's memoised posterior chain and its invalidation."""
+
+    #: every cached posterior quantity, in dependency order
+    _POSTERIOR_CACHES = ("_stats_cache", "_pstate_cache", "_engine_cache")
+
+    def _init_posterior_caches(self) -> None:
+        for name in self._POSTERIOR_CACHES:
+            setattr(self, name, None)
+
+    def _invalidate_posterior(self) -> None:
+        """New params (or new data without an incremental refresh) -> every
+        cached posterior quantity is stale: the reduced Stats, the q(u)
+        factor solves (PredictiveState), and the jitted engine holding that
+        state.  EVERY mutation path must route through here (or through
+        ``_refresh_posterior``) — never clear a subset by hand."""
+        self._init_posterior_caches()
+
+    def _refresh_posterior(self, stats, pstate) -> None:
+        """The online-update alternative to invalidation: install a folded
+        Stats / incrementally refreshed PredictiveState pair and swap the
+        new state into the live engine (no recompilation — same shapes).
+        Passing ``pstate=None`` drops the downstream caches instead (they
+        rebuild lazily from the new stats)."""
+        self._stats_cache = stats
+        self._pstate_cache = pstate
+        if pstate is None:
+            self._engine_cache = None
+        elif self._engine_cache is not None:
+            self._engine_cache.swap_state(pstate)

@@ -18,11 +18,13 @@ from jax.flatten_util import ravel_pytree
 from . import bound as bound_mod
 from . import covariance as cov
 from . import init_utils
+from . import stats as stats_mod
+from .posterior_cache import PosteriorCacheMixin
 from .scg import scg
 from .stats import partial_stats_chunked
 
 
-class SGPR:
+class SGPR(PosteriorCacheMixin):
     """Sparse GP regression with inducing points Z and a pluggable
     covariance expression (``kernel=``; default SE-ARD, the paper's).
 
@@ -78,9 +80,11 @@ class SGPR:
             "hyp": jax.tree.map(lambda v: jnp.asarray(v, jnp.float64), hyp0),
             "z": jnp.asarray(z0, jnp.float64),
         }
-        self._stats_cache = None
-        self._pstate_cache = None   # serve.PredictiveState (q(u) factor solves)
-        self._engine_cache = None   # default serve.PredictEngine
+        self._init_posterior_caches()   # stats / PredictiveState / engine
+        # Online-update bookkeeping: [start, stop) row ranges of the data
+        # blocks folded so far (block 0 = the constructor data); `forget`
+        # removes by index and renumbers later blocks (list semantics).
+        self._blocks: list[tuple[int, int]] = [(0, self.n)]
 
         def neg_bound(params, x_, y_):
             st = self._map_stats(params["hyp"], params["z"], y_, x_)
@@ -161,15 +165,95 @@ class SGPR:
                   f"steps={res.n_steps} (B={bb} blocks/step)")
         return res
 
-    # -- posterior ----------------------------------------------------------
-    def _invalidate_posterior(self):
-        """New params -> every cached posterior quantity is stale: the
-        reduced Stats, the q(u) factor solves (PredictiveState), and the
-        jitted engine holding that state."""
-        self._stats_cache = None
-        self._pstate_cache = None
-        self._engine_cache = None
+    # -- online updates (continual learning) --------------------------------
+    def update(self, x_new: np.ndarray, y_new: np.ndarray) -> int:
+        """Absorb a new data block WITHOUT re-scanning history: O(k·m²).
 
+        Folds the block's partial Stats into the cached reduced Stats
+        (``stats.fold_stats`` — exact, the paper's additivity across
+        blocks) and, if a ``PredictiveState`` is cached, refreshes its
+        factors in place via the rank-k Cholesky update path
+        (``serve.online``; O(m²k) instead of the O(m³) refactorisation),
+        swapping the refreshed state into the live engine with no
+        recompilation.  Parameters are untouched — call ``fit``/``fit_svi``
+        afterwards to re-optimise with the enlarged dataset (warm start).
+
+        Returns the new block's index for a later :meth:`forget`.
+        """
+        x_new = jnp.atleast_2d(jnp.asarray(x_new, jnp.float64))
+        y_new = jnp.atleast_2d(jnp.asarray(y_new, jnp.float64))
+        if x_new.shape[0] != y_new.shape[0]:
+            raise ValueError(
+                f"x_new/y_new row mismatch: {x_new.shape[0]} vs "
+                f"{y_new.shape[0]}")
+        if x_new.shape[1] != self.q or y_new.shape[1] != self.d:
+            raise ValueError(
+                f"expected (k, {self.q}) inputs and (k, {self.d}) outputs, "
+                f"got {x_new.shape} / {y_new.shape}")
+        # Stats of the history (cached or one last full scan) and of the
+        # new block — both EXACT scans: fold/downdate identities only hold
+        # for unscaled statistics (see stats.fold_stats).
+        base = self._stats()
+        delta = self._map_stats(self.params["hyp"], self.params["z"],
+                                y_new, x_new)
+        folded = stats_mod.fold_stats(base, delta)
+
+        pstate = self._pstate_cache
+        if pstate is not None:
+            from ..serve import online
+            pstate = online.update_state(pstate, x_new, y_new).state
+
+        self.x = jnp.concatenate([self.x, x_new])
+        self.y = jnp.concatenate([self.y, y_new])
+        self.n = self.x.shape[0]
+        self._blocks.append((self.n - x_new.shape[0], self.n))
+        self._refresh_posterior(folded, pstate)
+        return len(self._blocks) - 1
+
+    def forget(self, block: int):
+        """Remove a previously absorbed block (continual-learning
+        counterpart of :meth:`update`): downdates the reduced Stats and the
+        cached serving factors — rank-k Cholesky *downdate* with a guarded
+        fallback to refactorisation when the removal is ill-conditioned —
+        again without re-scanning the surviving data.
+
+        ``block`` indexes the fold order (0 = the constructor data); later
+        blocks renumber down by one, like ``list.pop``.  Returns the
+        removed ``(x, y)`` arrays.
+        """
+        nblocks = len(self._blocks)
+        if not -nblocks <= block < nblocks:
+            raise IndexError(
+                f"block {block} out of range ({nblocks} blocks held)")
+        start, stop = self._blocks[block % nblocks]
+        x_old, y_old = self.x[start:stop], self.y[start:stop]
+
+        base = self._stats()
+        delta = self._map_stats(self.params["hyp"], self.params["z"],
+                                y_old, x_old)
+        downdated = stats_mod.downdate_stats(base, delta)
+
+        pstate = self._pstate_cache
+        if pstate is not None:
+            from ..serve import online
+            pstate = online.downdate_state(pstate, x_old, y_old).state
+
+        k = stop - start
+        self.x = jnp.concatenate([self.x[:start], self.x[stop:]])
+        self.y = jnp.concatenate([self.y[:start], self.y[stop:]])
+        self.n = self.x.shape[0]
+        del self._blocks[block % nblocks]
+        self._blocks = [(s - k, e - k) if s >= stop else (s, e)
+                        for s, e in self._blocks]
+        self._refresh_posterior(downdated, pstate)
+        return np.asarray(x_old), np.asarray(y_old)
+
+    @property
+    def num_blocks(self) -> int:
+        """How many data blocks the model currently holds (fold order)."""
+        return len(self._blocks)
+
+    # -- posterior ----------------------------------------------------------
     def _stats(self):
         if self._stats_cache is None:
             self._stats_cache = self._map_stats(

@@ -57,6 +57,9 @@ class Stats(NamedTuple):
     def __add__(self, other: "Stats") -> "Stats":  # type: ignore[override]
         return Stats(*(a + b for a, b in zip(self, other)))
 
+    def __sub__(self, other: "Stats") -> "Stats":
+        return Stats(*(a - b for a, b in zip(self, other)))
+
     def scale(self, c) -> "Stats":
         return Stats(*(c * t for t in self))
 
@@ -298,3 +301,47 @@ def reduce_stats(parts: list[Stats]) -> Stats:
     for p in parts[1:]:
         out = out + p
     return out
+
+
+# -- online posterior updates (continual learning) --------------------------
+#
+# Every field of ``Stats`` is a plain sum over points, so the statistics of
+# a union of data blocks are the element-wise sum of the blocks' statistics.
+# That additivity is what the paper's map-reduce exploits *spatially*
+# (across shards); ``fold_stats``/``downdate_stats`` exploit it *temporally*:
+# a trained model absorbs a new block (or forgets an old one) by adding
+# (subtracting) the block's partial Stats into its reduced Stats — no
+# re-scan of history, cost independent of how much data came before.
+
+def fold_stats(base: Stats, delta: Stats) -> Stats:
+    """Fold a block's partial Stats into reduced Stats: ``stats(A ∪ B)``
+    from ``stats(A)`` and ``stats(B)`` — exact, O(m² + md).
+
+    Both arguments must be *exact* (unscaled) statistics for the identity
+    to be exact.  SVI-reweighted Stats (``partial_stats_chunked`` with
+    ``batch_blocks``) are unbiased *estimates* of the exact ones: folding
+    one in yields an unbiased estimate of the folded Stats (the reweighting
+    is linear, so it commutes with the fold), but ``downdate_stats`` then
+    only undoes it in expectation — the online engines (``SGPR.update``,
+    ``DistributedGP.update_stats_fn``) therefore always compute block
+    deltas with the exact scan.  Zero-weight rows (distributed padding,
+    failed points) already contribute nothing to ``delta`` and need no
+    special handling here.
+    """
+    return base + delta
+
+
+def downdate_stats(base: Stats, delta: Stats) -> Stats:
+    """Remove a block's partial Stats: the exact inverse of
+    :func:`fold_stats` (``downdate_stats(fold_stats(s, d), d) == s`` up to
+    float addition error).
+
+    ``delta`` must be the statistics of a block previously folded in,
+    computed at the *same* hyper-parameters and inducing inputs — Stats are
+    a function of (hyp, z), so a fit between fold and downdate invalidates
+    the cached block deltas (recompute them from the stored rows, as
+    ``SGPR.forget`` does).  Downdating a block that was never folded can
+    leave ``D`` indefinite; downstream factor refreshes guard against that
+    (``serve.online``).
+    """
+    return base - delta

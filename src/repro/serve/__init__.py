@@ -12,19 +12,27 @@ batched/sharded low-latency predict, sample, and multi-model engines.
               backend, configurable compute_dtype, include_noise/full_cov;
               MultiPredictEngine: N stacked states vmap-served from one
               executable (stack_states, mixture_moments)
+  online      incremental PredictiveState refresh for online updates:
+              update_state / downdate_state (rank-k Cholesky update of the
+              stored factors, O(m²k), guarded fallback to refactorisation)
+              — paired with ``PredictEngine.ingest``/``forget``/
+              ``swap_state`` for the ingest-update-serve loop
 
 See docs/serving.md for the serving guide and tuning tables.
 """
-from . import engine, posterior
+from . import engine, online, posterior
 from .engine import (MultiPredictEngine, PredictEngine, mixture_moments,
                      stack_states)
+from .online import (RefreshResult, downdate_state, refresh_state,
+                     update_state)
 from .posterior import (PredictiveState, extract_state, load_state,
                         predict_full_cov, predict_mean_var, sample_block,
                         sample_joint, save_state, state_from_model)
 
 __all__ = [
-    "engine", "posterior", "PredictEngine", "MultiPredictEngine",
-    "PredictiveState", "extract_state", "load_state", "mixture_moments",
-    "predict_full_cov", "predict_mean_var", "sample_block", "sample_joint",
-    "save_state", "stack_states", "state_from_model",
+    "engine", "online", "posterior", "PredictEngine", "MultiPredictEngine",
+    "PredictiveState", "RefreshResult", "downdate_state", "extract_state",
+    "load_state", "mixture_moments", "predict_full_cov", "predict_mean_var",
+    "refresh_state", "sample_block", "sample_joint", "save_state",
+    "stack_states", "state_from_model", "update_state",
 ]

@@ -187,6 +187,61 @@ class PredictEngine:
     def _noise_var(self):
         return jnp.exp(-self._cstate.hyp["log_beta"])
 
+    # -- online updates (ingest-update-serve) -------------------------------
+    def swap_state(self, state: posterior.PredictiveState) -> None:
+        """Atomically replace the served state with a same-shape one —
+        zero recompilation (the jitted programs take the state as an
+        argument, so identical shapes/dtypes hit the existing executables).
+
+        This is the serving half of an online update: refresh the factors
+        incrementally (``serve.online``) or re-extract after a re-fit, then
+        swap the result in while the engine keeps answering queries.
+        """
+        if state.kernel != self.state.kernel:
+            raise ValueError(
+                "swap_state needs the same kernel expression "
+                f"({self.state.kernel} vs {state.kernel}) — build a new "
+                "engine for a different covariance")
+        for a, b in zip(jax.tree.leaves(self.state), jax.tree.leaves(state)):
+            if a.shape != b.shape:
+                raise ValueError(
+                    "swap_state needs identical leaf shapes (same m, q, d) "
+                    f"— got {a.shape} vs {b.shape}; build a new engine for "
+                    "a reshaped state")
+        self.state = state
+        cstate = (state if jnp.dtype(state.z.dtype) == self.compute_dtype
+                  else state.astype(self.compute_dtype))
+        if self.mesh is not None:
+            cstate = jax.device_put(
+                cstate, NamedSharding(self.mesh, self._rep_spec))
+        self._cstate = cstate
+
+    def ingest(self, x_new, y_new, weights=None):
+        """Absorb a block of k observations into the served posterior in
+        O(m²k) — rank-k factor refresh (``serve.online.update_state``) +
+        :meth:`swap_state` — without touching history or recompiling.
+        Returns the refresh info (``online.RefreshResult``); the engine
+        serves the refreshed state from the moment this returns.
+
+        Note this moves the *posterior*, not the hyper-parameters: it is
+        the serving mirror of ``SGPR.update`` (which also folds the
+        training-side Stats so a later re-fit starts exact).
+        """
+        from . import online
+        res = online.update_state(self.state, x_new, y_new, weights)
+        self.swap_state(res.state)
+        return res
+
+    def forget(self, x_old, y_old, weights=None):
+        """Remove a previously ingested block from the served posterior —
+        rank-k downdate with the guarded refactorisation fallback
+        (``serve.online.downdate_state``) + :meth:`swap_state`.  Returns
+        the refresh info (inspect ``.fallback`` for telemetry)."""
+        from . import online
+        res = online.downdate_state(self.state, x_old, y_old, weights)
+        self.swap_state(res.state)
+        return res
+
     def predict(self, xstar, include_noise: bool = False):
         """Batched diag-variance prediction: ``(mean (t, d), var (t,))``."""
         xq, t = self.pad_queries(xstar)

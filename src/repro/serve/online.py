@@ -1,0 +1,204 @@
+"""Incremental PredictiveState refresh — the serve side of online updates.
+
+``core.stats.fold_stats`` makes the *statistics* of a new (or forgotten)
+block an O(m²) add; this module makes the *serving factors* an O(m²k)
+refresh, so a live server can ingest events and keep answering queries
+without ever re-scanning history or refactorising from scratch.
+
+With the hyper-parameters and inducing inputs fixed (an online update moves
+the data, not the model), ``L = chol(Kmm)`` is unchanged and a block of k
+points perturbs the whitened system by exactly a rank-k term:
+
+    B' = B ± V Vᵀ,      V = √β · L⁻¹ Knmᵀ diag(√w)        (m, k)
+
+so every stored factor refreshes without an m×m factorisation:
+
+    LB'     rank-k Cholesky update/downdate of LB          O(m²k)
+    c2'     LB'⁻¹ (LB c2 ± L⁻¹ ΔC)                         O(m²(k+d))
+    a_mean' β L⁻ᵀ LB'⁻ᵀ c2'                                O(m²d)
+    g'      g ± Z T⁻¹ Zᵀ  (Woodbury on B; T is k×k)        O(m²k + k³)
+
+The happy path never calls ``cholesky`` on an m×m matrix — only on the k×k
+Woodbury capacitance ``T`` (trace-asserted in tests/test_chol_update.py).
+
+Downdates are guarded: an indefinite or ill-conditioned rank-k downdate
+(removing a block that was never folded, or one that carries almost all of
+the model's information) trips the ``cond_tol`` pivot guard in
+``core.chol_update`` — or surfaces as a non-finite k×k factor — and the
+refresh falls back to a full O(m³) refactorisation of ``B'`` from the
+stored factors, exactly the rebuild ``extract_state`` would do.  The
+fallback is reported, not raised (``RefreshResult.fallback``), because it
+is a slow path, not an error.
+
+The orchestration here is deliberately *eager* — the heavy pieces
+(``block_update_factors``, the rank-k sweeps in ``core.chol_update``,
+``_woodbury_correction``, ``_finish``) are individually jitted and cached
+per shape, but the guard is a host-side branch, so the compiled happy path
+never contains the fallback's m×m Cholesky (the k×k capacitance factor in
+``_correction_from`` stays eager on purpose: it is the one runtime
+``cholesky`` call the tests trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from ..core import chol_update
+from ..core.chol_update import DEFAULT_COND_TOL
+
+Array = jax.Array
+
+
+class RefreshResult(NamedTuple):
+    """An incremental refresh outcome: the new state plus how it was made.
+
+    ``fallback`` is True when the guarded rank-k path was abandoned for the
+    full refactorisation (ill-conditioned/indefinite downdate) — useful for
+    serving telemetry and asserted on directly by the tests.
+    """
+
+    state: "object"      # serve.posterior.PredictiveState
+    fallback: bool
+
+
+@jax.jit
+def block_update_factors(state, x_new: Array, y_new: Array,
+                         weights: Array | None = None):
+    """The rank-k quantities a block contributes: ``(V, dC)``.
+
+    ``V = √β L⁻¹ Knmᵀ diag(√w)`` (m, k) — the whitened block columns whose
+    outer product is the perturbation of ``B``; ``dC = Knmᵀ diag(w) Y``
+    (m, d) — the block's information-vector delta.  Zero-weight rows
+    (padding) produce zero columns, which the rank-k sweeps treat as exact
+    no-ops, so padded blocks refresh bit-identically to unpadded ones.
+    """
+    dt = state.z.dtype
+    x_new = jnp.asarray(x_new, dt)
+    y_new = jnp.asarray(y_new, dt)
+    k = x_new.shape[0]
+    w = (jnp.ones((k,), dt) if weights is None
+         else jnp.asarray(weights, dt))
+    beta = jnp.exp(state.hyp["log_beta"])
+    knm = state.kernel.K(state.hyp, x_new, state.z)           # (k, m)
+    dC = knm.T @ (w[:, None] * y_new)                         # (m, d)
+    U = jsl.solve_triangular(state.chol_kmm, knm.T * jnp.sqrt(w)[None, :],
+                             lower=True)                      # (m, k)
+    return jnp.sqrt(beta) * U, dC
+
+
+@jax.jit
+def _finish(state, LB_new: Array, LiC_new: Array, g_new: Array):
+    """Re-derive the downstream serving contractions from refreshed factors."""
+    beta = jnp.exp(state.hyp["log_beta"])
+    c2 = jsl.solve_triangular(LB_new, LiC_new, lower=True)
+    t1 = jsl.solve_triangular(LB_new.T, c2, lower=False)
+    a_mean = beta * jsl.solve_triangular(state.chol_kmm.T, t1, lower=False)
+    return dataclasses.replace(state, chol_sigma=LB_new, c2=c2,
+                               a_mean=a_mean, g=g_new)
+
+
+@jax.jit
+def _woodbury_correction(state, V: Array):
+    """``(Z T⁻¹ Zᵀ, T_chol)`` for ``B' = B ± V Vᵀ``: the rank-k change of
+    ``Σ⁻¹`` (hence of ``g = Kmm⁻¹ − Σ⁻¹``), using the *pre-update* LB.
+
+    For an update (``T = I + Vᵀ B⁻¹ V``) the correction is *added* to g;
+    for a downdate (``T = I − Vᵀ B⁻¹ V``) it is *subtracted*.  Returns the
+    k×k Cholesky of T so the caller can check it stayed finite (a failed T
+    means the downdate was not PD — same condition the pivot guard tracks).
+    """
+    LB = state.chol_sigma
+    y1 = jsl.solve_triangular(LB, V, lower=True)
+    Y = jsl.solve_triangular(LB.T, y1, lower=False)           # B⁻¹ V
+    Z = jsl.solve_triangular(state.chol_kmm.T, Y, lower=False)  # L⁻ᵀ B⁻¹ V
+    return y1, Y, Z
+
+
+def _correction_from(y1: Array, Z: Array, sign: float):
+    k = Z.shape[1]
+    T = jnp.eye(k, dtype=Z.dtype) + sign * (y1.T @ y1)
+    # k×k only — never the full m×m system (tests/test_chol_update.py
+    # monkeypatches cholesky to enforce this).
+    Tc = jnp.linalg.cholesky(T)
+    S = jsl.solve_triangular(Tc, Z.T, lower=True)             # (k, m)
+    return S.T @ S, Tc
+
+
+def _refactorize(state, V: Array, LiC_new: Array, sign: float):
+    """The guarded fallback: rebuild ``LB' = chol(B ± V Vᵀ)`` and ``g``
+    densely from the stored factors — O(m³), exact, always PSD-safe when
+    the downdate itself is legitimate."""
+    LB = state.chol_sigma
+    m = LB.shape[0]
+    Bmat = LB @ LB.T + sign * (V @ V.T)
+    Bmat = 0.5 * (Bmat + Bmat.T)
+    LB_new = jnp.linalg.cholesky(Bmat)
+    eye = jnp.eye(m, dtype=LB.dtype)
+    Li = jsl.solve_triangular(state.chol_kmm, eye, lower=True)
+    LBi = jsl.solve_triangular(LB_new, eye, lower=True)
+    v1 = Li.T
+    v2 = v1 @ LBi.T
+    g = v1 @ v1.T - v2 @ v2.T
+    return _finish(state, LB_new, LiC_new, g)
+
+
+def refresh_state(state, x_new: Array, y_new: Array,
+                  weights: Array | None = None, sign: float = 1.0,
+                  cond_tol: float = DEFAULT_COND_TOL) -> RefreshResult:
+    """Refresh every serving factor for a folded (+1) / forgotten (−1)
+    block of k points in O(m²(k+d)), with a guarded O(m³) fallback.
+
+    The state's (hyp, z, chol_kmm) are unchanged — an online update moves
+    data, not parameters; after a ``fit`` the deltas must be recomputed and
+    the state re-extracted (``SGPR.update`` handles this by going through
+    the model's invalidation path).
+    """
+    if jnp.dtype(state.z.dtype).itemsize < 4:
+        raise ValueError(
+            "incremental refresh runs Cholesky-update math on the stored "
+            "factors; sub-f32 (quantized) states cannot carry it — refresh "
+            "the full-precision master state and re-quantize "
+            "(docs/serving.md)")
+    if sign not in (1.0, -1.0):
+        raise ValueError(f"sign must be +1.0 or -1.0, got {sign}")
+    V, dC = block_update_factors(state, x_new, y_new, weights)
+    LiC = state.chol_sigma @ state.c2 + sign * jsl.solve_triangular(
+        state.chol_kmm, dC, lower=True)
+
+    if sign > 0:
+        LB_new, ok = chol_update.chol_update_rank_k(state.chol_sigma, V,
+                                                    cond_tol=cond_tol)
+    else:
+        LB_new, ok = chol_update.chol_downdate_rank_k(state.chol_sigma, V,
+                                                      cond_tol=cond_tol)
+    if bool(ok):
+        y1, _, Z = _woodbury_correction(state, V)
+        corr, Tc = _correction_from(y1, Z, sign)
+        if bool(jnp.all(jnp.isfinite(Tc))
+                & jnp.all(jnp.diagonal(Tc) > 0)):
+            g_new = state.g + sign * corr
+            return RefreshResult(_finish(state, LB_new, LiC, g_new), False)
+    return RefreshResult(_refactorize(state, V, LiC, sign), True)
+
+
+def update_state(state, x_new: Array, y_new: Array,
+                 weights: Array | None = None,
+                 cond_tol: float = DEFAULT_COND_TOL) -> RefreshResult:
+    """Absorb a new block into the serving state (pair with
+    ``stats.fold_stats`` on the training side)."""
+    return refresh_state(state, x_new, y_new, weights, sign=1.0,
+                         cond_tol=cond_tol)
+
+
+def downdate_state(state, x_old: Array, y_old: Array,
+                   weights: Array | None = None,
+                   cond_tol: float = DEFAULT_COND_TOL) -> RefreshResult:
+    """Forget a previously folded block (pair with
+    ``stats.downdate_stats``).  Ill-conditioned or indefinite removals take
+    the guarded fallback (``RefreshResult.fallback``)."""
+    return refresh_state(state, x_old, y_old, weights, sign=-1.0,
+                         cond_tol=cond_tol)

@@ -95,6 +95,33 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
     return eng, eng.make_value_and_grad(d, argnums=argnums)
 
 
+def make_gp_update_step(mesh, d: int, *, data_axes=("data",),
+                        latent: bool = False, psi2_fn=None,
+                        reg_stats_fn=None, chunk_size: int | None = None,
+                        kernel_backend: str = "xla", kernel=None):
+    """Distributed *online-update* step builder — the continual-learning
+    analogue of :func:`make_gp_train_step`.
+
+    Returns ``(engine, fold_step)`` where ``fold_step(base_stats, hyp, z,
+    y_new, mu_new, s_new, w_new, fmask) -> Stats`` absorbs a new sharded
+    data block into already-reduced statistics: shards map their slice of
+    the block locally (exact scan), one constant-size psum reduces, and
+    the replicated base folds in (``stats.fold_stats``).  Cost is
+    independent of how much history ``base_stats`` summarises.  Pair with
+    ``engine.update_predictive_state`` (rank-k factor refresh, no
+    collectives) to move the serving state, and ``stats.downdate_stats``
+    to forget.  No ``batch_blocks``: fold/downdate identities require the
+    exact (unscaled) block statistics — SVI belongs to training steps.
+    """
+    from ..core.distributed import DistributedGP
+
+    eng = DistributedGP(mesh, data_axes=data_axes, latent=latent,
+                        psi2_fn=psi2_fn, reg_stats_fn=reg_stats_fn,
+                        chunk_size=chunk_size, kernel_backend=kernel_backend,
+                        kernel=kernel)
+    return eng, eng.update_stats_fn(d)
+
+
 def make_prefill_step(cfg: ModelConfig):
     def prefill_step(params, batch):
         return tf.forward_prefill(cfg, params, batch)

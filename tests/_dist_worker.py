@@ -278,6 +278,105 @@ def main():
         for coll in ("psum", "all_reduce", "all_gather", "all_to_all"):
             assert coll not in jx, f"sharded {name} program contains {coll}"
 
+    # --- online updates: distributed fold of a new sharded block -----------
+    # The additive Stats decoupling works temporally as well as spatially:
+    # shards map ONLY the new block, one psum reduces it, and the replicated
+    # base folds in — cost independent of how much history the base holds.
+    import jax.scipy.linalg as jsl
+    from repro.core import chol_update
+    from repro.core.stats import fold_stats, zero_stats
+    from repro.serve import online
+
+    k_new = 19  # odd → the new block pads unevenly across 8 shards
+    x_new = rng.standard_normal((k_new, q))
+    y_new = rng.standard_normal((k_new, d))
+    new_data, w_new = eng.put_data(y=y_new, mu=x_new)
+    fold = eng.update_stats_fn(d)
+    red = eng.reduced_stats(d)
+    mI = z.shape[0]
+
+    # Folding into the additive identity IS the exact reduce — bitwise:
+    # identical map + psum program, plus an elementwise add of zeros.
+    st_zero_fold = fold(zero_stats(mI, d), hyp, jnp.asarray(z),
+                        new_data["y"], new_data["mu"], None, w_new, ones)
+    st_red_new = red(hyp, jnp.asarray(z), new_data["y"], new_data["mu"],
+                     None, w_new, ones)
+    for name, a, b_l in zip(st_zero_fold._fields, st_zero_fold, st_red_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_l),
+                                      err_msg=f"fold(zero) != reduce [{name}]")
+
+    # Sharded fold == sequential fold == one scan over the union.
+    base_dist = red(hyp, jnp.asarray(z), data["y"], data["mu"], None, w, ones)
+    folded = fold(base_dist, hyp, jnp.asarray(z), new_data["y"],
+                  new_data["mu"], None, w_new, ones)
+    st_new_seq = _pstats(hyp, jnp.asarray(z), jnp.asarray(y_new),
+                         jnp.asarray(x_new), s=None, latent=False)
+    st_union = _pstats(hyp, jnp.asarray(z),
+                       jnp.asarray(np.vstack([y, y_new])),
+                       jnp.asarray(np.vstack([x, x_new])),
+                       s=None, latent=False)
+    seq_fold = fold_stats(base_dist, st_new_seq)
+    for a, b_l, c_l in zip(folded, seq_fold, st_union):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_l),
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c_l),
+                                   rtol=1e-9, atol=1e-11)
+
+    # Fold-then-extract == extract over the union scan.
+    state_folded = extract_state(hyp, jnp.asarray(z), folded)
+    state_union = extract_state(hyp, jnp.asarray(z), st_union)
+    for a, b_l in zip(jax.tree.leaves(state_folded),
+                      jax.tree.leaves(state_union)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_l),
+                                   rtol=1e-8, atol=1e-9)
+
+    # --- online updates: serve-side rank-k refresh on the mesh -------------
+    xnj, ynj = jnp.asarray(x_new), jnp.asarray(y_new)
+    res_up = eng.update_predictive_state(state, xnj, ynj)
+    assert res_up.fallback is False
+    for a, b_l in zip(jax.tree.leaves(res_up.state),
+                      jax.tree.leaves(state_union)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_l),
+                                   rtol=1e-8, atol=1e-9)
+    res_dn = eng.downdate_predictive_state(res_up.state, xnj, ynj)
+    assert res_dn.fallback is False
+    for a, b_l in zip(jax.tree.leaves(res_dn.state), jax.tree.leaves(state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_l),
+                                   rtol=1e-9, atol=1e-10)
+
+    # The refreshed state serves through the live sharded engine unchanged
+    # (same executable — swap_state only moves the device buffers).
+    sengine.swap_state(res_up.state)
+    m_up_sh, _ = sengine.predict(xs, include_noise=True)
+    eng_union = PredictEngine(state_union, block_size=4)
+    m_up_ref, _ = eng_union.predict(xs, include_noise=True)
+    np.testing.assert_allclose(np.asarray(m_up_sh), np.asarray(m_up_ref),
+                               rtol=1e-7, atol=1e-9)
+
+    # Zero-collective property: the ENTIRE happy-path refresh math (rank-k
+    # factor update + Woodbury correction + downstream contractions) is
+    # replicated local work — its jaxpr must contain no collectives, the
+    # continual-learning analogue of the zero-communication serving map.
+    def _refresh_math(st_, x_, y_):
+        V, dC = online.block_update_factors(st_, x_, y_)
+        LB_new, _ok = chol_update.chol_update_rank_k(st_.chol_sigma, V)
+        y1, _, Zc = online._woodbury_correction(st_, V)
+        corr, _ = online._correction_from(y1, Zc, 1.0)
+        LiC = st_.chol_sigma @ st_.c2 + jsl.solve_triangular(
+            st_.chol_kmm, dC, lower=True)
+        return online._finish(st_, LB_new, LiC, st_.g + corr)
+
+    jaxpr_refresh = str(jax.make_jaxpr(_refresh_math)(state, xnj, ynj))
+    for coll in ("psum", "all_reduce", "all_gather", "all_to_all"):
+        assert coll not in jaxpr_refresh, \
+            f"serve-side refresh math contains {coll}"
+    # ...while the training-side fold contains exactly the one psum family
+    # it is allowed (the constant-size Stats reduction).
+    assert "psum" in str(jax.make_jaxpr(
+        lambda *a: fold(*a))(zero_stats(mI, d), hyp, jnp.asarray(z),
+                             new_data["y"], new_data["mu"], None, w_new,
+                             ones))
+
     print("DIST-WORKER-OK")
 
 

@@ -5,6 +5,19 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Registered in pytest.ini too; duplicated here so the markers exist
+    # even when the suite is run from a directory where pytest.ini is not
+    # picked up (e.g. an embedded checkout) — unknown-marker warnings are
+    # how marker typos rot, so registration is belt-and-braces.
+    config.addinivalue_line(
+        "markers", "slow: long-running test (CI statistical job)")
+    config.addinivalue_line(
+        "markers",
+        "statistical: randomized/statistical-tolerance test "
+        "(CI statistical job)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,292 @@
+"""Rank-k Cholesky update/downdate (core.chol_update) and the guarded
+incremental serve-refresh built on it (serve.online).
+
+Three contracts:
+  1. Numerics — rank-k update/downdate matches direct refactorisation of
+     ``L Lᵀ ± V Vᵀ`` at f64, and the full serve refresh matches
+     ``extract_state`` over the union/remainder.
+  2. Guard — indefinite or ill-conditioned downdates set ``ok=False`` at
+     the chol level and take the reported (not raised) refactorisation
+     fallback at the serve level.
+  3. Cost shape — the happy-path refresh never calls ``cholesky`` on the
+     full m×m system: ``core.chol_update`` contains no cholesky at all
+     (source-asserted) and the only runtime call is the k×k Woodbury
+     capacitance (trace-asserted via monkeypatch).
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import chol_update
+from repro.core.chol_update import chol_downdate_rank_k, chol_update_rank_k
+from repro.core.stats import fold_stats, partial_stats
+from repro.serve import (downdate_state, extract_state, predict_mean_var,
+                         update_state)
+
+
+def _spd_chol(rng, m, scale=1.0):
+    a = rng.standard_normal((m, m))
+    A = a @ a.T + m * np.eye(m)
+    return jnp.asarray(np.linalg.cholesky(scale * A))
+
+
+def _state_and_data(seed=0, n=40, m=9, q=2, d=2):
+    rng = np.random.default_rng(seed)
+    hyp = {"log_sf2": jnp.asarray(0.3), "log_ell": jnp.zeros(q),
+           "log_beta": jnp.asarray(1.2)}
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    st = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return extract_state(hyp, z, st), hyp, z, x, y, rng
+
+
+def _assert_states_close(got, ref, rtol=1e-8, atol=1e-9):
+    for name in ("chol_sigma", "c2", "a_mean", "g"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            rtol=rtol, atol=atol, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# core.chol_update numerics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k", [(3, 1), (7, 2), (12, 5), (9, 9)])
+def test_rank_k_update_matches_refactorization(m, k):
+    rng = np.random.default_rng(m * 31 + k)
+    L = _spd_chol(rng, m)
+    V = jnp.asarray(rng.standard_normal((m, k)))
+    Lu, ok = chol_update_rank_k(L, V)
+    assert bool(ok)
+    direct = np.linalg.cholesky(np.asarray(L @ L.T + V @ V.T))
+    np.testing.assert_allclose(np.asarray(Lu), direct, rtol=1e-12, atol=1e-13)
+    # factor is genuinely lower-triangular with positive diagonal
+    assert np.allclose(np.triu(np.asarray(Lu), 1), 0.0)
+    assert (np.diag(np.asarray(Lu)) > 0).all()
+
+
+@pytest.mark.parametrize("m,k", [(5, 1), (9, 3), (12, 4)])
+def test_rank_k_downdate_matches_refactorization(m, k):
+    """Downdating columns that were previously added is PD by construction."""
+    rng = np.random.default_rng(m * 17 + k)
+    L0 = _spd_chol(rng, m)
+    V = jnp.asarray(rng.standard_normal((m, k)))
+    Lup, _ = chol_update_rank_k(L0, V)
+    Ldn, ok = chol_downdate_rank_k(Lup, V)
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(Ldn), np.asarray(L0),
+                               rtol=1e-11, atol=1e-12)
+    direct = np.linalg.cholesky(np.asarray(Lup @ Lup.T - V @ V.T))
+    np.testing.assert_allclose(np.asarray(Ldn), direct, rtol=1e-10, atol=1e-11)
+
+
+def test_vector_v_promoted_to_rank_1():
+    rng = np.random.default_rng(3)
+    L = _spd_chol(rng, 6)
+    v = jnp.asarray(rng.standard_normal(6))
+    L1, ok1 = chol_update_rank_k(L, v)
+    L2, ok2 = chol_update_rank_k(L, v[:, None])
+    assert bool(ok1) and bool(ok2)
+    np.testing.assert_array_equal(np.asarray(L1), np.asarray(L2))
+
+
+def test_zero_columns_are_exact_noops():
+    """Zero-weight padding rows become zero V columns — bit-identical L."""
+    rng = np.random.default_rng(4)
+    L = _spd_chol(rng, 8)
+    V = jnp.zeros((8, 3))
+    for f in (chol_update_rank_k, chol_downdate_rank_k):
+        Lz, ok = f(L, V)
+        assert bool(ok)
+        np.testing.assert_array_equal(np.asarray(Lz), np.asarray(L))
+
+
+def test_indefinite_downdate_flags_not_raises():
+    """Removing mass that was never added → A − VVᵀ indefinite → ok=False
+    and NO exception (the flag, not an error, is the contract; the factor
+    is a clamped artefact the caller must discard)."""
+    rng = np.random.default_rng(5)
+    L = _spd_chol(rng, 6)
+    V = jnp.asarray(10.0 * rng.standard_normal((6, 2)))
+    Ld, ok = chol_downdate_rank_k(L, V)
+    assert not bool(ok)
+    assert Ld.shape == L.shape
+
+
+def test_ill_conditioned_downdate_trips_relative_guard():
+    """A *legitimate* (PD) downdate whose pivot collapses below cond_tol of
+    its old magnitude is flagged even though direct refactorisation would
+    succeed — the guard is a condition-number guard, not just a PD check."""
+    L = jnp.eye(2)
+    x = jnp.asarray([np.sqrt(1.0 - 1e-10), 0.0])
+    # direct factorisation of I − xxᵀ = diag(1e-10, 1) is fine...
+    direct = np.linalg.cholesky(np.asarray(L @ L.T) - np.outer(x, x))
+    assert np.isfinite(direct).all()
+    # ...but the incremental pivot ratio r²/d² = 1e-10 < cond_tol = 1e-8.
+    _, ok = chol_downdate_rank_k(L, x, cond_tol=1e-8)
+    assert not bool(ok)
+    # with a looser tolerance the same downdate passes
+    Ld, ok2 = chol_downdate_rank_k(L, x, cond_tol=1e-12)
+    assert bool(ok2)
+    np.testing.assert_allclose(np.asarray(Ld), direct, rtol=1e-6, atol=1e-12)
+
+
+def test_update_never_trips_guard():
+    rng = np.random.default_rng(6)
+    L = _spd_chol(rng, 5, scale=1e-6)           # tiny base
+    V = jnp.asarray(1e3 * rng.standard_normal((5, 4)))  # huge update
+    _, ok = chol_update_rank_k(L, V)
+    assert bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# serve.online: refresh parity + guarded fallback
+# ---------------------------------------------------------------------------
+
+def test_update_state_matches_union_extract():
+    state, hyp, z, x, y, rng = _state_and_data()
+    xb = jnp.asarray(rng.standard_normal((7, x.shape[1])))
+    yb = jnp.asarray(rng.standard_normal((7, y.shape[1])))
+    res = update_state(state, xb, yb)
+    assert res.fallback is False
+    st_union = fold_stats(partial_stats(hyp, z, y, x, s=None, latent=False),
+                          partial_stats(hyp, z, yb, xb, s=None, latent=False))
+    ref = extract_state(hyp, z, st_union)
+    _assert_states_close(res.state, ref)
+    xs = jnp.asarray(rng.standard_normal((11, x.shape[1])))
+    mg, vg = predict_mean_var(res.state, xs)
+    mr, vr = predict_mean_var(ref, xs)
+    np.testing.assert_allclose(np.asarray(mg), np.asarray(mr),
+                               rtol=1e-9, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(vg), np.asarray(vr),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_downdate_after_update_is_identity():
+    state, _, _, x, y, rng = _state_and_data(seed=1)
+    xb = jnp.asarray(rng.standard_normal((5, x.shape[1])))
+    yb = jnp.asarray(rng.standard_normal((5, y.shape[1])))
+    up = update_state(state, xb, yb)
+    back = downdate_state(up.state, xb, yb)
+    assert up.fallback is False and back.fallback is False
+    _assert_states_close(back.state, state, rtol=1e-11, atol=1e-12)
+
+
+def test_padded_block_refreshes_like_unpadded():
+    """Zero-weight rows (padding) must not move the state at all relative
+    to the unpadded block — the V columns they produce are exact no-ops."""
+    state, _, _, x, y, rng = _state_and_data(seed=2)
+    q, d = x.shape[1], y.shape[1]
+    xb = jnp.asarray(rng.standard_normal((4, q)))
+    yb = jnp.asarray(rng.standard_normal((4, d)))
+    pad_x = jnp.concatenate([xb, jnp.asarray(rng.standard_normal((3, q)))])
+    pad_y = jnp.concatenate([yb, jnp.asarray(rng.standard_normal((3, d)))])
+    w = jnp.asarray([1.0] * 4 + [0.0] * 3)
+    res_pad = update_state(state, pad_x, pad_y, weights=w)
+    res = update_state(state, xb, yb)
+    assert res_pad.fallback is False
+    _assert_states_close(res_pad.state, res.state, rtol=1e-12, atol=1e-14)
+
+
+def test_illegitimate_forget_takes_guarded_fallback():
+    """Forgetting a block that was never folded (scaled up so B − VVᵀ goes
+    indefinite) must take the fallback — reported via the flag, never
+    raised.  The target system is not PD, so no method can produce a valid
+    state; ``fallback=True`` is the telemetry signal that this removal was
+    not a legitimate incremental downdate."""
+    state, _, _, x, y, rng = _state_and_data(seed=3, n=20)
+    xb = jnp.asarray(rng.standard_normal((15, x.shape[1])))
+    yb = jnp.asarray(5.0 * rng.standard_normal((15, y.shape[1])))
+    res = downdate_state(state, xb, yb, weights=50.0 * jnp.ones(15))
+    assert res.fallback is True
+    assert res.state.chol_sigma.shape == state.chol_sigma.shape
+
+
+def test_legitimate_but_ill_conditioned_forget_falls_back_to_exact():
+    """A forget that is mathematically valid but trips the pivot guard must
+    come back via refactorisation with the EXACT answer (remainder
+    extract), so callers never trade correctness for the fast path."""
+    state, hyp, z, x, y, _ = _state_and_data(seed=4, n=30)
+    # forget almost everything: the survivor state is legitimate but the
+    # downdate removes nearly all information → tiny pivot ratios.
+    xb, yb = x[2:], y[2:]
+    res = downdate_state(state, xb, yb)
+    ref = extract_state(hyp, z,
+                        partial_stats(hyp, z, y[:2], x[:2], s=None,
+                                      latent=False))
+    _assert_states_close(res.state, ref, rtol=1e-6, atol=1e-8)
+
+
+def test_refresh_rejects_quantized_state_and_bad_sign():
+    from repro.serve.online import refresh_state
+
+    state, _, _, x, y, rng = _state_and_data(seed=5, n=15)
+    xb = jnp.asarray(rng.standard_normal((2, x.shape[1])))
+    yb = jnp.asarray(rng.standard_normal((2, y.shape[1])))
+    with pytest.raises(ValueError, match="sub-f32"):
+        update_state(state.astype(jnp.bfloat16), xb, yb)
+    with pytest.raises(ValueError, match="sign"):
+        refresh_state(state, xb, yb, sign=2.0)
+
+
+# ---------------------------------------------------------------------------
+# cost shape: no m×m cholesky on the happy path
+# ---------------------------------------------------------------------------
+
+def test_chol_update_module_never_calls_cholesky():
+    src = inspect.getsource(chol_update)
+    assert "cholesky" not in src.replace("jnp.linalg.cholesky", "") or \
+        "cholesky(" not in src
+    assert "cholesky(" not in src
+
+
+@pytest.mark.parametrize("direction", ["update", "downdate"])
+def test_happy_path_refresh_never_factorizes_m_by_m(monkeypatch, direction):
+    """Trace every ``jnp.linalg.cholesky`` call during a happy-path refresh:
+    the only factorisation allowed is the k×k Woodbury capacitance.  An
+    m×m call would mean the O(m²k) contract silently degraded to O(m³)."""
+    state, _, _, x, y, rng = _state_and_data(seed=6)
+    m = state.chol_sigma.shape[0]
+    k = 3
+    assert k != m
+    xb = jnp.asarray(rng.standard_normal((k, x.shape[1])))
+    yb = jnp.asarray(rng.standard_normal((k, y.shape[1])))
+    if direction == "downdate":                     # fold first, then forget
+        state = update_state(state, xb, yb).state
+
+    calls: list[tuple] = []
+    real = jnp.linalg.cholesky
+
+    def spy(a, *args, **kwargs):
+        calls.append(tuple(a.shape))
+        return real(a, *args, **kwargs)
+
+    monkeypatch.setattr(jnp.linalg, "cholesky", spy)
+    res = (update_state if direction == "update"
+           else downdate_state)(state, xb, yb)
+    assert res.fallback is False
+    assert calls == [(k, k)], \
+        f"happy-path refresh factorised {calls}; only ({k}, {k}) allowed"
+
+
+def test_fallback_path_is_the_only_m_by_m_factorization(monkeypatch):
+    state, _, _, x, y, rng = _state_and_data(seed=7, n=20)
+    m = state.chol_sigma.shape[0]
+    xb = jnp.asarray(rng.standard_normal((15, x.shape[1])))
+    yb = jnp.asarray(5.0 * rng.standard_normal((15, y.shape[1])))
+
+    calls: list[tuple] = []
+    real = jnp.linalg.cholesky
+
+    def spy(a, *args, **kwargs):
+        calls.append(tuple(a.shape))
+        return real(a, *args, **kwargs)
+
+    monkeypatch.setattr(jnp.linalg, "cholesky", spy)
+    res = downdate_state(state, xb, yb, weights=50.0 * jnp.ones(15))
+    assert res.fallback is True
+    assert (m, m) in calls

@@ -5,6 +5,8 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 _WORKER = r"""
@@ -54,6 +56,7 @@ print("DRYRUN-INTEGRATION-OK")
 """
 
 
+@pytest.mark.slow
 def test_dryrun_lowering_on_small_mesh():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -12,6 +12,12 @@ from repro.train import steps
 
 load_all()
 ARCHS = sorted(all_configs())
+# The recurrent-scan archs pay a minutes-scale CPU compile even at reduced
+# config; CI runs them in the slow/statistical job, not the tier-1 gate
+# (a bare `pytest` still runs everything).
+_SLOW_ARCHS = {"recurrentgemma-9b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+               else a for a in ARCHS]
 
 
 def _batch(cfg, rng, b=2, t=32):
@@ -28,7 +34,7 @@ def _batch(cfg, rng, b=2, t=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step(arch, rng):
     cfg = all_configs()[arch].reduced()
     state, _ = steps.init_train_state(cfg, jax.random.PRNGKey(0))
@@ -47,7 +53,7 @@ def test_train_step(arch, rng):
     assert float(m2["loss"]) < float(m["loss"]), arch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_then_decode(arch, rng):
     cfg = all_configs()[arch].reduced()
     state, _ = steps.init_train_state(cfg, jax.random.PRNGKey(1))
@@ -74,7 +80,7 @@ def test_prefill_then_decode(arch, rng):
                for a, b_ in zip(flat1, flat2))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_prefill(arch, rng):
     """Teacher-forced decode over a short sequence must reproduce the
     prefill's final logits (cache path == train path)."""

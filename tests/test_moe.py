@@ -4,6 +4,8 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 _WORKER = r"""
@@ -51,6 +53,7 @@ print("MOE-WORKER-OK")
 """
 
 
+@pytest.mark.slow
 def test_moe_sharded_parity_subprocess():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,347 @@
+"""Online posterior updates: the Stats fold/downdate algebra and the
+``SGPR.update`` / ``SGPR.forget`` continual-learning loop built on it.
+
+The paper's bound depends on the data only through sufficient statistics
+that are ADDITIVE across data blocks — the same decoupling that shards the
+map step spatially also folds blocks temporally.  These tests pin the two
+identities everything else rests on,
+
+    fold_stats(stats(A), stats(B)) == stats(A ∪ B)           (exactness)
+    downdate_stats(fold_stats(S, Δ), Δ) == S                 (invertibility)
+
+to f64 across the kernel zoo, zero-weight padding, the latent (GPLVM)
+statistics, and both kernel backends — deterministically, and (when
+hypothesis is installed — the CI statistical job) over randomly drawn
+block sizes and kernels.  On top of the algebra: end-to-end
+``update()``-then-``predict()`` == retrain-from-scratch parity, exact
+``forget`` round-trips, and the stale-cache regression tests — after an
+``update()`` the serving engine must answer from the refreshed state, and
+``fit``/``fit_svi`` must drop every posterior cache.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SGPR, init_utils
+from repro.core.covariance import (SEARD, Linear, Matern32, Periodic,
+                                   Product, Sum)
+from repro.core.stats import (Stats, downdate_stats, fold_stats,
+                              partial_stats, zero_stats)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # tier-1 container: deterministic tests only
+    HAVE_HYPOTHESIS = False
+
+# The PR-6 kernel zoo: primitives and compositions (disjoint + overlapping
+# dims exercise every psi/reg code path that feeds the statistics).
+KERNELS = {
+    "se": SEARD(),
+    "matern32": Matern32(dims=(0, 1), quad_order=11),
+    "linear": Linear(),
+    "periodic": Periodic(dims=(1,), quad_order=15),
+    "sum": Sum(SEARD(dims=(0,)), Linear(dims=(1,))),
+    "product": Product(SEARD(dims=(0,)), Matern32(dims=(1,))),
+}
+
+
+def _setup(seed, n, m=6, q=2, d=2, kernel=None, latent=False):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    s = jnp.asarray(rng.uniform(0.05, 0.5, (n, q))) if latent else None
+    hyp = jax.tree.map(jnp.asarray,
+                       init_utils.default_hyp_for(kernel or SEARD(),
+                                                  np.asarray(y), q))
+    return rng, hyp, z, x, y, s
+
+
+def _assert_stats_close(got: Stats, ref: Stats, rtol=1e-12, atol=1e-12):
+    for name, g, r in zip(Stats._fields, got, ref):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# the fold/downdate algebra (deterministic, runs everywhere)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(KERNELS))
+def test_fold_equals_union_scan(name):
+    """fold(stats(A), stats(B)) == stats(A∪B) for every kernel expression."""
+    kern = KERNELS[name]
+    _, hyp, z, x, y, _ = _setup(11, n=37, kernel=kern)
+    na = 21
+    st_a = partial_stats(hyp, z, y[:na], x[:na], s=None, latent=False,
+                         kernel=kern)
+    st_b = partial_stats(hyp, z, y[na:], x[na:], s=None, latent=False,
+                         kernel=kern)
+    st_union = partial_stats(hyp, z, y, x, s=None, latent=False, kernel=kern)
+    _assert_stats_close(fold_stats(st_a, st_b), st_union)
+    # fold is symmetric and zero_stats is its identity
+    _assert_stats_close(fold_stats(st_b, st_a), st_union)
+    m, d = z.shape[0], y.shape[1]
+    _assert_stats_close(fold_stats(zero_stats(m, d), st_union), st_union,
+                        rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("name", sorted(KERNELS))
+def test_downdate_undoes_fold(name):
+    kern = KERNELS[name]
+    _, hyp, z, x, y, _ = _setup(12, n=30, kernel=kern)
+    base = partial_stats(hyp, z, y[:18], x[:18], s=None, latent=False,
+                         kernel=kern)
+    delta = partial_stats(hyp, z, y[18:], x[18:], s=None, latent=False,
+                          kernel=kern)
+    back = downdate_stats(fold_stats(base, delta), delta)
+    _assert_stats_close(back, base, rtol=1e-13, atol=1e-13)
+
+
+def test_fold_with_zero_weight_padding_is_exact():
+    """Padded blocks (zero-weight rows) fold identically to unpadded ones —
+    the property the distributed fold relies on for ragged shards."""
+    _, hyp, z, x, y, _ = _setup(13, n=24)
+    na = 15
+    pad = 5
+    w_b = jnp.asarray([1.0] * (24 - na) + [0.0] * pad)
+    xb = jnp.concatenate([x[na:], jnp.ones((pad, x.shape[1]))])
+    yb = jnp.concatenate([y[na:], jnp.full((pad, y.shape[1]), 7.0)])
+    st_a = partial_stats(hyp, z, y[:na], x[:na], s=None, latent=False)
+    st_b_pad = partial_stats(hyp, z, yb, xb, s=None, weights=w_b,
+                             latent=False)
+    st_union = partial_stats(hyp, z, y, x, s=None, latent=False)
+    _assert_stats_close(fold_stats(st_a, st_b_pad), st_union,
+                        rtol=1e-14, atol=1e-14)
+    assert float(st_b_pad.n) == 24 - na      # padding never counts
+
+
+def test_latent_stats_fold_including_kl():
+    """GPLVM-side statistics (psi moments + the KL term) are additive too."""
+    _, hyp, z, x, y, s = _setup(14, n=26, latent=True)
+    na = 11
+    st_a = partial_stats(hyp, z, y[:na], x[:na], s=s[:na], latent=True)
+    st_b = partial_stats(hyp, z, y[na:], x[na:], s=s[na:], latent=True)
+    st_union = partial_stats(hyp, z, y, x, s=s, latent=True)
+    folded = fold_stats(st_a, st_b)
+    _assert_stats_close(folded, st_union)
+    assert float(folded.KL) > 0.0
+    _assert_stats_close(downdate_stats(folded, st_b), st_a,
+                        rtol=1e-13, atol=1e-13)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis — CI statistical job; deterministic twins above)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _names = sorted(KERNELS)
+
+    @pytest.mark.statistical
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_a=st.integers(1, 24),
+           n_b=st.integers(1, 24), pad=st.integers(0, 5),
+           ki=st.integers(0, len(_names) - 1))
+    def test_property_fold_equals_union_scan(seed, n_a, n_b, pad, ki):
+        """For ANY split/padding/kernel: folding block stats == one scan."""
+        kern = KERNELS[_names[ki]]
+        rng, hyp, z, x, y, _ = _setup(seed % 2**16, n=n_a + n_b, kernel=kern)
+        xb = jnp.concatenate(
+            [x[n_a:], jnp.asarray(rng.standard_normal((pad, x.shape[1])))])
+        yb = jnp.concatenate(
+            [y[n_a:], jnp.asarray(rng.standard_normal((pad, y.shape[1])))])
+        w = jnp.asarray([1.0] * n_b + [0.0] * pad)
+        st_a = partial_stats(hyp, z, y[:n_a], x[:n_a], s=None, latent=False,
+                             kernel=kern)
+        st_b = partial_stats(hyp, z, yb, xb, s=None, weights=w, latent=False,
+                             kernel=kern)
+        st_union = partial_stats(hyp, z, y, x, s=None, latent=False,
+                                 kernel=kern)
+        _assert_stats_close(fold_stats(st_a, st_b), st_union,
+                            rtol=1e-11, atol=1e-11)
+
+    @pytest.mark.statistical
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_base=st.integers(1, 30),
+           k=st.integers(1, 12), ki=st.integers(0, len(_names) - 1))
+    def test_property_downdate_fold_is_identity(seed, n_base, k, ki):
+        kern = KERNELS[_names[ki]]
+        _, hyp, z, x, y, _ = _setup(seed % 2**16, n=n_base + k, kernel=kern)
+        base = partial_stats(hyp, z, y[:n_base], x[:n_base], s=None,
+                             latent=False, kernel=kern)
+        delta = partial_stats(hyp, z, y[n_base:], x[n_base:], s=None,
+                              latent=False, kernel=kern)
+        _assert_stats_close(downdate_stats(fold_stats(base, delta), delta),
+                            base, rtol=1e-11, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: SGPR.update / forget vs retrain-from-scratch
+# ---------------------------------------------------------------------------
+
+def _fresh_like(mdl, x, y):
+    """An SGPR built from scratch on (x, y) with mdl's params — the
+    full-rescan reference an incremental update must match."""
+    ref = SGPR(np.asarray(x), np.asarray(y),
+               num_inducing=mdl.params["z"].shape[0],
+               z=np.asarray(mdl.params["z"]), kernel=mdl.kernel)
+    ref.params = mdl.params
+    return ref
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_update_then_predict_matches_retrain(rng, backend):
+    n, k, q, d = 48, 9, 2, 2
+    x = rng.standard_normal((n, q)); y = rng.standard_normal((n, d))
+    xb = rng.standard_normal((k, q)); yb = rng.standard_normal((k, d))
+    mdl = SGPR(x, y, num_inducing=7, kernel_backend=backend)
+    xs = rng.standard_normal((17, q))
+    mdl.predict(xs)                      # warm every cache pre-update
+    block = mdl.update(xb, yb)
+    assert block == 1 and mdl.num_blocks == 2 and mdl.n == n + k
+    ref = _fresh_like(mdl, np.vstack([x, xb]), np.vstack([y, yb]))
+    m_up, v_up = mdl.predict(xs, include_noise=True)
+    m_ref, v_ref = ref.predict(xs, include_noise=True)
+    np.testing.assert_allclose(m_up, m_ref, rtol=1e-9, atol=1e-10)
+    np.testing.assert_allclose(v_up, v_ref, rtol=1e-9, atol=1e-10)
+    # the folded statistics drive the exact bound too
+    assert abs(mdl.log_bound() - ref.log_bound()) < 1e-9 * abs(ref.log_bound())
+
+
+@pytest.mark.parametrize("name", ["matern32", "sum"])
+def test_update_composes_with_kernel_zoo(rng, name):
+    kern = KERNELS[name]
+    x = rng.standard_normal((30, 2)); y = rng.standard_normal((30, 2))
+    xb = rng.standard_normal((6, 2)); yb = rng.standard_normal((6, 2))
+    mdl = SGPR(x, y, num_inducing=6, kernel=kern)
+    mdl.predict(rng.standard_normal((5, 2)))
+    mdl.update(xb, yb)
+    ref = _fresh_like(mdl, np.vstack([x, xb]), np.vstack([y, yb]))
+    xs = rng.standard_normal((9, 2))
+    np.testing.assert_allclose(mdl.predict(xs)[0], ref.predict(xs)[0],
+                               rtol=1e-8, atol=1e-9)
+
+
+def test_forget_roundtrip_restores_original(rng):
+    x = rng.standard_normal((40, 2)); y = rng.standard_normal((40, 2))
+    xb = rng.standard_normal((8, 2)); yb = rng.standard_normal((8, 2))
+    mdl = SGPR(x, y, num_inducing=6)
+    xs = rng.standard_normal((13, 2))
+    m0, v0 = mdl.predict(xs)
+    block = mdl.update(xb, yb)
+    xr, yr = mdl.forget(block)
+    np.testing.assert_array_equal(xr, xb)
+    np.testing.assert_array_equal(yr, yb)
+    assert mdl.num_blocks == 1 and mdl.n == 40
+    m1, v1 = mdl.predict(xs)
+    np.testing.assert_allclose(m1, m0, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(v1, v0, rtol=1e-10, atol=1e-12)
+
+
+def test_forget_renumbers_and_supports_negative_index(rng):
+    x = rng.standard_normal((25, 2)); y = rng.standard_normal((25, 2))
+    mdl = SGPR(x, y, num_inducing=5)
+    b1x = rng.standard_normal((4, 2)); b1y = rng.standard_normal((4, 2))
+    b2x = rng.standard_normal((6, 2)); b2y = rng.standard_normal((6, 2))
+    mdl.update(b1x, b1y)
+    mdl.update(b2x, b2y)
+    assert mdl.num_blocks == 3
+    xr, _ = mdl.forget(1)                # drop the middle block
+    np.testing.assert_array_equal(xr, b1x)
+    assert mdl.num_blocks == 2 and mdl.n == 25 + 6
+    xr2, _ = mdl.forget(-1)              # negative index = newest block
+    np.testing.assert_array_equal(xr2, b2x)
+    assert mdl.num_blocks == 1 and mdl.n == 25
+    with pytest.raises(IndexError, match="out of range"):
+        mdl.forget(5)
+
+
+def test_update_validates_shapes(rng):
+    mdl = SGPR(rng.standard_normal((20, 2)), rng.standard_normal((20, 2)),
+               num_inducing=4)
+    with pytest.raises(ValueError, match="row mismatch"):
+        mdl.update(rng.standard_normal((3, 2)), rng.standard_normal((4, 2)))
+    with pytest.raises(ValueError, match="expected"):
+        mdl.update(rng.standard_normal((3, 5)), rng.standard_normal((3, 2)))
+
+
+# ---------------------------------------------------------------------------
+# stale-cache regression: update/forget/fit must never serve old factors
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_refreshed_state_after_update(rng):
+    """The live engine after ``update()`` must (a) be the SAME engine object
+    (state swapped in place — no recompilation) and (b) hold exactly the
+    refreshed state, so a stale cached posterior is structurally
+    impossible."""
+    x = rng.standard_normal((30, 2)); y = rng.standard_normal((30, 2))
+    mdl = SGPR(x, y, num_inducing=5)
+    xs = rng.standard_normal((7, 2))
+    stale_mean, _ = mdl.predict(xs)
+    engine_before = mdl._engine_cache
+    assert engine_before is not None
+    mdl.update(rng.standard_normal((5, 2)), rng.standard_normal((5, 2)))
+    assert mdl._engine_cache is engine_before           # swapped, not rebuilt
+    assert mdl._engine_cache.state is mdl._pstate_cache  # single truth
+    assert mdl._pstate_cache is not None
+    fresh = _fresh_like(mdl, mdl.x, mdl.y)
+    np.testing.assert_allclose(mdl.predict(xs)[0], fresh.predict(xs)[0],
+                               rtol=1e-9, atol=1e-10)
+    assert not np.allclose(mdl.predict(xs)[0], stale_mean)
+
+
+def test_forget_also_refreshes_live_engine(rng):
+    x = rng.standard_normal((30, 2)); y = rng.standard_normal((30, 2))
+    mdl = SGPR(x, y, num_inducing=5)
+    xs = rng.standard_normal((7, 2))
+    m0, _ = mdl.predict(xs)
+    b = mdl.update(rng.standard_normal((5, 2)), rng.standard_normal((5, 2)))
+    eng = mdl._engine_cache
+    mdl.forget(b)
+    assert mdl._engine_cache is eng
+    assert mdl._engine_cache.state is mdl._pstate_cache
+    np.testing.assert_allclose(mdl.predict(xs)[0], m0, rtol=1e-10, atol=1e-12)
+
+
+def test_fit_drops_every_posterior_cache(rng):
+    x = rng.standard_normal((25, 2)); y = rng.standard_normal((25, 2))
+    mdl = SGPR(x, y, num_inducing=4)
+    mdl.predict(rng.standard_normal((3, 2)))
+    assert mdl._stats_cache is not None and mdl._engine_cache is not None
+    mdl.fit(max_iters=2)
+    assert mdl._stats_cache is None
+    assert mdl._pstate_cache is None
+    assert mdl._engine_cache is None
+
+
+def test_update_before_any_predict_needs_no_state(rng):
+    """update() on a cold model folds stats only — the PredictiveState is
+    built lazily on the first predict, from the folded stats."""
+    x = rng.standard_normal((30, 2)); y = rng.standard_normal((30, 2))
+    xb = rng.standard_normal((4, 2)); yb = rng.standard_normal((4, 2))
+    mdl = SGPR(x, y, num_inducing=5)
+    mdl.update(xb, yb)
+    assert mdl._pstate_cache is None and mdl._engine_cache is None
+    ref = _fresh_like(mdl, np.vstack([x, xb]), np.vstack([y, yb]))
+    xs = rng.standard_normal((6, 2))
+    np.testing.assert_allclose(mdl.predict(xs)[0], ref.predict(xs)[0],
+                               rtol=1e-9, atol=1e-10)
+
+
+def test_gplvm_shares_the_invalidation_helper(rng):
+    """BayesianGPLVM rides the same PosteriorCacheMixin: stats memoise and
+    the shared _invalidate_posterior clears them."""
+    from repro.core import BayesianGPLVM
+
+    y = rng.standard_normal((20, 3))
+    mdl = BayesianGPLVM(y, 2, num_inducing=4)
+    st1 = mdl._stats()
+    assert mdl._stats() is st1                       # memoised
+    mdl._invalidate_posterior()
+    assert mdl._stats_cache is None
+    st2 = mdl._stats()
+    assert st2 is not st1

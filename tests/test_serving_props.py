@@ -21,6 +21,10 @@ from repro.core.stats import partial_stats  # noqa: E402
 from repro.serve import (PredictEngine, extract_state,  # noqa: E402
                          predict_mean_var)
 
+# Randomized (hypothesis) properties: CI runs this module in the
+# statistical job, where requirements-dev is installed.
+pytestmark = pytest.mark.statistical
+
 
 def _random_state(seed, m, d, q=2, n=30):
     rng = np.random.default_rng(seed)

@@ -138,6 +138,7 @@ def test_full_batch_svi_equals_exact_bound_and_grads(rng):
                                    rtol=1e-9, atol=1e-11)
 
 
+@pytest.mark.statistical
 def test_per_shard_sampling_unbiased(rng):
     """The distributed scheme — each shard samples ITS OWN blocks
     independently and reweights locally before the sum — stays unbiased:
