@@ -37,7 +37,8 @@ FAST_ARGS = {
     "psi2": dict(n=2048, iters=2),
     "lm": dict(steps=3),
     "stream": dict(n_parity=4000, n_big=60_000, m=48, block=1024,
-                   budget_gb=0.5, iters=2),
+                   budget_gb=0.5, iters=2, host_n0=40_000,
+                   host_mults=(1, 2, 4), host_chunk=1024, host_bpc=8),
     "regmap": dict(n=4096, m=32, block=1024, iters=2),
     "svi": dict(n=4096, m=32, block=256, iters=2, batch_sweep=(1, 2, 4, 8),
                 n_mults=(1, 2)),

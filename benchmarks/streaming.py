@@ -51,8 +51,112 @@ def _mk_data(rng, n, m, q, d):
     return jnp.asarray(y), jnp.asarray(mu), jnp.asarray(s), z
 
 
+def _rss_bytes() -> int:
+    """Current resident set size (Linux /proc; no psutil dependency)."""
+    import os
+
+    with open("/proc/self/statm") as f:
+        return int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE")
+
+
+def host_stream(n0=250_000, n_mults=(1, 2, 4), m=48, chunk=4096,
+                bpc=4, iters=3):
+    """Host-streaming ingestion: RSS flat in n, throughput vs in-memory.
+
+    Two measurements on the ``DistributedGP`` streamed path (the data never
+    exists as a host array — ``flight_like`` computes each chunk on demand,
+    standing in for a memory-mapped >RAM file):
+
+      * rss sweep   — full exact streamed pass at n0, 2 n0, 4 n0: host RSS
+                      growth across the sweep must stay O(chunk), not O(n)
+                      (an in-memory ingest of the 4 n0 endpoint would add
+                      ~n * 80 bytes);
+      * throughput  — streamed ingestion (chunk staging overlapped with the
+                      fold by the double-buffered prefetcher) vs in-memory
+                      ingestion (``put_data`` shard + transfer, then one
+                      ``reduced_stats``) of the same host-resident rows:
+                      streamed must hold >= 0.9x of the in-memory rows/s.
+    """
+    from repro.core.distributed import DistributedGP
+    from repro.data.synthetic import flight_like
+    from repro.launch.mesh import make_compat_mesh
+
+    q, d = 8, 1
+    rng = np.random.default_rng(0)
+    hyp = default_hyp(q)
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    n_dev = len(jax.devices())
+    mesh = make_compat_mesh((n_dev,), ("data",))
+    eng = DistributedGP(mesh, data_axes=("data",), latent=False,
+                        chunk_size=chunk)
+    rows = []
+
+    # -- rss sweep: streamed pass at growing n, host memory flat ------------
+    rss_deltas = {}
+    for mult in n_mults:
+        n = n0 * mult
+        stream = eng.put_data(stream=flight_like(n=n, seed=3),
+                              blocks_per_chunk=bpc)
+        eng.streamed_stats(hyp, z, stream)          # warm-up/compile pass
+        r0 = _rss_bytes()
+        st = eng.streamed_stats(hyp, z, stream)
+        jax.block_until_ready(st)
+        rss_deltas[n] = _rss_bytes() - r0
+        rows.append((f"hoststream/rss_n={n}", 0.0,
+                     f"rss_delta_bytes={rss_deltas[n]}"))
+        print(f"  n={n:>9,d}: streamed pass rss delta "
+              f"{rss_deltas[n] / 2**20:+7.1f} MiB "
+              f"(in-memory ingest would add ~{n * (q + d + 1) * 8 / 2**20:.0f} MiB)")
+    n_hi, n_lo = n0 * n_mults[-1], n0 * n_mults[0]
+    # Flat in n: going 1x -> 4x must not add memory proportional to the
+    # extra rows (allow chunk-scale slack + 32 MiB allocator noise).
+    slack = 32 * 2**20 + 4 * bpc * chunk * (q + d + 1) * 8 * n_dev
+    assert rss_deltas[n_hi] - rss_deltas[n_lo] < slack, (
+        f"streamed RSS grew with n: {rss_deltas}")
+
+    # -- throughput: streamed vs in-memory ingestion of identical rows ------
+    # Both sides start from host-resident arrays (the streamed side through
+    # the BlockStream/ArraySource chunk path a memory-mapped file would
+    # take), so the race is pad+transfer+map-reduce either way.
+    raw = flight_like(n=n0, seed=3).read(0, n0)
+    fmask = jnp.ones((eng.n_shards,))
+    red = eng.reduced_stats(d=d)
+
+    def ingest_inmem():
+        data, w = eng.put_data(y=raw["y"], mu=raw["mu"])
+        return red(hyp, z, data["y"], data["mu"], None, w, fmask)
+
+    jax.block_until_ready(ingest_inmem())
+    t_mem = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(ingest_inmem())
+        t_mem.append(time.perf_counter() - t0)
+    stream = eng.put_data(stream=raw, blocks_per_chunk=bpc)
+    jax.block_until_ready(eng.streamed_stats(hyp, z, stream))
+    t_str = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.streamed_stats(hyp, z, stream))
+        t_str.append(time.perf_counter() - t0)
+    # Best-of-iters: the gate asks "can the streamed path keep up", so score
+    # capability, not machine contention — the prefetch thread makes the
+    # streamed side disproportionately sensitive to background CPU load.
+    dt_mem, dt_str = float(min(t_mem)), float(min(t_str))
+    ratio = dt_mem / dt_str
+    rows.append((f"hoststream/throughput_n={n0}", dt_str * 1e6,
+                 f"inmem_us={dt_mem * 1e6:.0f};streamed_x={ratio:.3f}"))
+    print(f"  throughput n={n0:,}: in-memory {n0 / dt_mem:,.0f} rows/s, "
+          f"streamed {n0 / dt_str:,.0f} rows/s ({ratio:.2f}x in-memory)")
+    assert ratio >= 0.9, (
+        f"streamed ingestion only {ratio:.2f}x of in-memory (need >= 0.9)")
+    return rows
+
+
 def streaming_map(n_parity=20_000, n_big=200_000, m=64, q=2, d=2,
-                  block=2048, budget_gb=2.0, iters=3):
+                  block=2048, budget_gb=2.0, iters=3,
+                  host_n0=250_000, host_mults=(1, 2, 4), host_chunk=4096,
+                  host_bpc=4):
     rng = np.random.default_rng(0)
     hyp = default_hyp(q)
     rows = []
@@ -123,6 +227,10 @@ def streaming_map(n_parity=20_000, n_big=200_000, m=64, q=2, d=2,
           f"{t_mono_big / 2**30:.2f} GiB temp (> {budget_gb:.1f} GiB budget "
           f"-> OOM); streamed needs {t_stream_big / 2**20:.1f} MiB and ran "
           f"in {dt * 1e3:.0f} ms/iter (bound={b:.2f})")
+
+    # -- host streaming: RSS flat in n, throughput vs in-memory -------------
+    rows.extend(host_stream(n0=host_n0, n_mults=host_mults, m=m,
+                            chunk=host_chunk, bpc=host_bpc, iters=iters))
     return rows
 
 

@@ -118,12 +118,19 @@ def pad_and_shard(arrs: dict, n_shards: int, block: int | None = None):
     1.0 on real rows, 0.0 on padding — so padding contributes nothing to any
     statistic (see ``stats.partial_stats``).  Runs on host (numpy in, numpy
     out) before device_put.
+
+    The padded n is always at least one full multiple: n < n_shards·block
+    (including n = 0) pads up to ``n_shards * block`` rather than producing
+    shard-empty (or zero-length) arrays that the shard_map programs cannot
+    split.  ``unpad`` inverts the row padding.
     """
     import numpy as np
 
+    from ..data.stream import padded_rows
+
     mult = n_shards * (block or 1)
     n = next(iter(arrs.values())).shape[0]
-    pad = (-n) % mult
+    pad = padded_rows(n, mult) - n
     out = {}
     for k, a in arrs.items():
         widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
@@ -132,6 +139,15 @@ def pad_and_shard(arrs: dict, n_shards: int, block: int | None = None):
         out[k] = np.pad(np.asarray(a), widths, constant_values=cval)
     w = np.concatenate([np.ones((n,), np.float64), np.zeros((pad,), np.float64)])
     return out, w
+
+
+def unpad(arrs, n: int):
+    """Strip the row padding ``pad_and_shard`` added: slice every array in
+    ``arrs`` (a dict, or one array) back to its first ``n`` rows — the exact
+    inverse of the padding, so ``unpad(pad_and_shard(x)[0], n) == x``."""
+    if isinstance(arrs, dict):
+        return {k: a[:n] for k, a in arrs.items()}
+    return arrs[:n]
 
 
 class DistributedGP:
@@ -214,6 +230,7 @@ class DistributedGP:
         self._data_spec = P(self.data_axes)
         self._rep_spec = P()
         self._stats_prog = None   # cached reduced_stats program (serving)
+        self._stream_cache: dict = {}   # streamed-ingestion programs
 
     # -- sharding helpers ---------------------------------------------------
     def data_sharding(self) -> NamedSharding:
@@ -222,13 +239,60 @@ class DistributedGP:
     def replicated_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self._rep_spec)
 
-    def put_data(self, **arrs):
-        """Pad + shard host arrays onto the mesh. Returns (dict, weights)."""
+    def put_data(self, stream=None, blocks_per_chunk: int = 1, **arrs):
+        """Stage host data for the SPMD programs.
+
+        In-memory mode (``put_data(y=..., mu=..., ...)``): pad + shard the
+        arrays onto the mesh; returns ``(dict, weights)`` — the whole
+        padded dataset is resident on device.
+
+        Streaming mode (``put_data(stream=source)``): no staging happens —
+        returns a ``data.stream.BlockStream`` over the source (a dict of
+        host arrays, a ``MemmapSource``/``SyntheticSource``, or any
+        ``(n, fields, read)`` object) cut into fixed-shape shard-major
+        chunks of ``blocks_per_chunk`` scan blocks per shard.  Feed it to
+        :meth:`streamed_stats` / :meth:`streamed_value_and_grad` /
+        :meth:`streamed_predictive_state`, which hold O(chunk) rows on
+        device at a time and reproduce the in-memory programs bitwise
+        (Stats/bound) or to f64 tolerance (grads).  Requires
+        ``chunk_size`` — the streaming block geometry is the scan-block
+        geometry.
+        """
+        if stream is not None:
+            if arrs:
+                raise ValueError(
+                    "put_data takes either stream=... or in-memory arrays, "
+                    "not both")
+            return self.open_stream(stream, blocks_per_chunk=blocks_per_chunk)
         padded, w = pad_and_shard(arrs, self.n_shards, block=self.chunk_size)
         sh = self.data_sharding()
         out = {k: jax.device_put(jnp.asarray(v), sh) for k, v in padded.items()}
         wdev = jax.device_put(jnp.asarray(w), sh)
         return out, wdev
+
+    def open_stream(self, source, blocks_per_chunk: int = 1):
+        """Wrap a host data source in a ``BlockStream`` with this engine's
+        shard/block geometry (``n_shards`` shards, ``chunk_size`` rows per
+        scan block) — the layout under which streamed ingestion is bitwise
+        equal to :meth:`put_data` + the in-device scan."""
+        from ..data.stream import BlockStream
+
+        if self.chunk_size is None:
+            raise ValueError(
+                "streaming ingestion requires chunk_size: the host chunks "
+                "are multiples of the in-device scan block")
+        if isinstance(source, BlockStream):
+            if (source.n_shards != self.n_shards
+                    or source.block_size != self.chunk_size):
+                raise ValueError(
+                    f"stream geometry ({source.n_shards} shards × "
+                    f"{source.block_size}-row blocks) does not match the "
+                    f"engine ({self.n_shards} × {self.chunk_size}) — open "
+                    "the stream through this engine")
+            return source
+        return BlockStream(source, n_shards=self.n_shards,
+                           block_size=self.chunk_size,
+                           blocks_per_chunk=blocks_per_chunk)
 
     # -- the SPMD program ---------------------------------------------------
     def _local_stats(self, hyp, z, y, mu, s, w, key=None, exact=False) -> Stats:
@@ -241,7 +305,7 @@ class DistributedGP:
             weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
             reg_stats_fn=self.reg_stats_fn, block_size=self.chunk_size,
             batch_blocks=None if exact else self.batch_blocks, key=key,
-            kernel=self.kernel,
+            kernel=self.kernel, force_scan=True,
         )
 
     def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d, key=None):
@@ -354,6 +418,370 @@ class DistributedGP:
             out_specs=self._rep_spec,
         )
         return jax.jit(f)
+
+    # -- streaming ingestion (host-fed chunk loop) --------------------------
+    #
+    # The in-memory programs stage the whole padded dataset on device; the
+    # streamed ones below hold ONE fixed-shape chunk (blocks_per_chunk scan
+    # blocks per shard) at a time, threading a *sharded* Stats carry — every
+    # leaf gains a leading (n_shards,) axis, spec P(data_axes) — through a
+    # per-chunk fold program that contains NO collective (jaxpr-asserted in
+    # tests/_dist_worker.py).  Because chunk assembly is shard-major
+    # (data.stream.BlockStream) and the carry threads INTO the chunked
+    # scan's own accumulator (stats.partial_stats_chunked(init=...)), each
+    # shard performs the identical float-add sequence over the identical
+    # block partition as the in-memory scan, and ONE final psum — the same
+    # collective reduced_stats runs — collapses the carry.  Streamed Stats
+    # and bound are therefore bitwise equal to the staged path, not merely
+    # close (tests/test_stream_ingest.py); only gradients (recovered by a
+    # second pass through the stats cotangent) carry float-reassociation
+    # error at f64 tolerance.  Host + device residency stays O(chunk) in n.
+
+    def _stream_progs(self, has_s: bool):
+        """Build (once per s-structure) the jitted per-chunk fold, final
+        reduce, and chunk-cotangent programs."""
+        cache_key = ("progs", has_s)
+        progs = self._stream_cache.get(cache_key)
+        if progs is not None:
+            return progs
+
+        def _local(hyp, z, y, mu, s, w, init=None):
+            return partial_stats_chunked(
+                hyp, z, y, mu, s, weights=w, latent=self.latent,
+                psi2_fn=self.psi2_fn, reg_stats_fn=self.reg_stats_fn,
+                block_size=self.chunk_size, kernel=self.kernel, init=init,
+                force_scan=True)
+
+        def _fold(carry, hyp, z, y, mu, s, w, fmask):
+            idx = _flat_shard_index(self.mesh, self.data_axes)
+            w = w * fmask[idx]
+            init = Stats(*(jnp.squeeze(t, 0) for t in carry))
+            st = _local(hyp, z, y, mu, s, w, init=init)
+            return Stats(*(t[None] for t in st))
+
+        def _reduce(carry):
+            st = Stats(*(jnp.squeeze(t, 0) for t in carry))
+            return Stats(*(lax.psum(t, self.data_axes) for t in st))
+
+        def _chunk_ip(hyp, z, y, mu, s, w, fmask, ct):
+            # <this chunk's reduced Stats, cotangent ct> — pass 2 of the
+            # streamed gradient differentiates this wrt (hyp, z).
+            idx = _flat_shard_index(self.mesh, self.data_axes)
+            w = w * fmask[idx]
+            st = _local(hyp, z, y, mu, s, w)
+            ip = sum(jnp.vdot(a, b) for a, b in zip(st, ct))
+            return lax.psum(ip, self.data_axes)
+
+        data, rep = self._data_spec, self._rep_spec
+        fold = jax.jit(shard_map(
+            _fold, mesh=self.mesh,
+            in_specs=(data, rep, rep, data, data, data, data, rep),
+            out_specs=data))
+        reduce_ = jax.jit(shard_map(
+            _reduce, mesh=self.mesh, in_specs=(data,), out_specs=rep))
+        chunk_vg = jax.jit(jax.value_and_grad(shard_map(
+            _chunk_ip, mesh=self.mesh,
+            in_specs=(rep, rep, data, data, data, data, rep, rep),
+            out_specs=rep), argnums=(0, 1)))
+        progs = {"fold": fold, "reduce": reduce_, "chunk_vg": chunk_vg}
+        self._stream_cache[cache_key] = progs
+        return progs
+
+    def _init_stream_carry(self, stream, hyp, z) -> Stats:
+        """Zero sharded carry with the exact leaf shapes/dtypes one chunk's
+        local stats produce (abstract eval — backend/kernel agnostic).
+        The eval_shape re-traces the whole chunked map, so the resulting
+        leaf structure is cached per (geometry, hyp/z structure) — carry
+        init must stay cheap relative to one chunk's fold."""
+        rows = stream.shard_chunk_rows
+        key = ("carry", rows,
+               tuple((k, tuple(v), str(jnp.dtype(stream.field_dtype(k))))
+                     for k, v in sorted(stream.fields.items())),
+               tuple(jnp.shape(t) for t in jax.tree.leaves((hyp, z))))
+        shapes = self._stream_cache.get(key)
+        if shapes is None:
+            sds = {k: jax.ShapeDtypeStruct((rows,) + tuple(tr),
+                                           jnp.dtype(stream.field_dtype(k)))
+                   for k, tr in stream.fields.items()}
+            wsd = jax.ShapeDtypeStruct((rows,), jnp.float64)
+
+            def f(y, mu, s, w):
+                return partial_stats_chunked(
+                    hyp, z, y, mu, s, weights=w, latent=self.latent,
+                    psi2_fn=self.psi2_fn, reg_stats_fn=self.reg_stats_fn,
+                    block_size=self.chunk_size, kernel=self.kernel,
+                    force_scan=True)
+
+            shapes = jax.eval_shape(f, sds["y"], sds["mu"], sds.get("s"),
+                                    wsd)
+            self._stream_cache[key] = shapes
+        carry = Stats(*(jnp.zeros((self.n_shards,) + t.shape, t.dtype)
+                        for t in shapes))
+        return jax.device_put(carry, self.data_sharding())
+
+    def _stage_stream(self, stream, prefetch_depth: int, indices=None):
+        """Prefetched iterator of device-staged ``(arrays, weights)`` chunks
+        — chunk i+1's host assembly + H2D overlaps compute on chunk i."""
+        from ..data.stream import prefetch, stage_to_device
+
+        return prefetch(stream.chunks(indices),
+                        stage_to_device(self.data_sharding()),
+                        depth=prefetch_depth)
+
+    def _stream_carry(self, hyp, z, stream, fmask, prefetch_depth: int):
+        """Fold every chunk into the sharded carry (no collective yet)."""
+        progs = self._stream_progs(has_s="s" in stream.fields)
+        carry = self._init_stream_carry(stream, hyp, z)
+        for arrs, w in self._stage_stream(stream, prefetch_depth):
+            carry = progs["fold"](carry, hyp, z, arrs["y"], arrs["mu"],
+                                  arrs.get("s"), w, fmask)
+        return carry
+
+    def streamed_stats(self, hyp, z, stream, fmask=None,
+                       prefetch_depth: int = 2) -> Stats:
+        """Exact reduced Stats from a host stream — bitwise equal to
+        :meth:`reduced_stats` over the same (staged) data, with device
+        residency O(chunk) instead of O(n).  ``stream`` is anything
+        :meth:`open_stream` accepts."""
+        stream = self.open_stream(stream)
+        if fmask is None:
+            fmask = jnp.ones((self.n_shards,))
+        carry = self._stream_carry(hyp, z, stream, fmask, prefetch_depth)
+        return self._stream_progs(has_s="s" in stream.fields)["reduce"](carry)
+
+    def _collapse_prog(self, d: int):
+        """Jitted (replicated) stats -> NEGATIVE bound with this engine's
+        failure-mode n-handling — the same global math ``_shard_bound``
+        runs after its psum, applied to already-reduced stats."""
+        cache_key = ("collapse", d)
+        prog = self._stream_cache.get(cache_key)
+        if prog is not None:
+            return prog
+
+        def neg(hyp, z, st, n_full):
+            if self.failure_mode == "rescale":
+                live_frac = st.n / n_full
+                st = Stats(A=st.A / live_frac, B=st.B / live_frac,
+                           C=st.C / live_frac, D=st.D / live_frac,
+                           KL=st.KL / live_frac, n=n_full)
+            else:
+                st = st._replace(n=n_full)
+            return -collapsed_bound(hyp, z, st, d, kernel=self.kernel)
+
+        prog = {
+            "neg": jax.jit(neg),
+            "vg": jax.jit(jax.value_and_grad(neg, argnums=(0, 1, 2))),
+        }
+        self._stream_cache[cache_key] = prog
+        return prog
+
+    def _bound_from_carry_prog(self, d: int):
+        """Mesh program: sharded carry -> psum -> failure-mode n-handling ->
+        replicated bound.  Structured exactly like ``_shard_bound``'s
+        post-map tail (the psum feeding the global math inside one
+        shard_map) so the streamed bound compiles to the same float
+        sequence as the in-memory one — this is what keeps the *bound*
+        bitwise, not just the Stats."""
+        cache_key = ("bound_carry", d)
+        prog = self._stream_cache.get(cache_key)
+        if prog is not None:
+            return prog
+
+        def body(carry, hyp, z, n_full):
+            st = Stats(*(jnp.squeeze(t, 0) for t in carry))
+            st = Stats(*(lax.psum(t, self.data_axes) for t in st))
+            if self.failure_mode == "rescale":
+                live_frac = st.n / n_full
+                st = Stats(A=st.A / live_frac, B=st.B / live_frac,
+                           C=st.C / live_frac, D=st.D / live_frac,
+                           KL=st.KL / live_frac, n=n_full)
+            else:
+                st = st._replace(n=n_full)
+            return collapsed_bound(hyp, z, st, d, kernel=self.kernel)
+
+        # NOT jitted: ``bound_fn`` hands back a bare shard_map, whose
+        # op-by-op dispatch rounds like the eager path — jitting this tail
+        # fuses the global math differently (≈1 ulp) and breaks the
+        # bitwise-bound contract with the in-memory program.
+        prog = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(self._data_spec, self._rep_spec, self._rep_spec,
+                      self._rep_spec),
+            out_specs=self._rep_spec)
+        self._stream_cache[cache_key] = prog
+        return prog
+
+    def streamed_bound(self, hyp, z, stream, d: int, fmask=None,
+                       n_full=None, prefetch_depth: int = 2):
+        """The distributed bound from a host stream — bitwise equal to
+        :meth:`bound_fn` on the staged data (same chunk-folded Stats
+        carry, same in-mesh psum + collapse tail)."""
+        stream = self.open_stream(stream)
+        if fmask is None:
+            fmask = jnp.ones((self.n_shards,))
+        n_full = float(stream.n) if n_full is None else n_full
+        carry = self._stream_carry(hyp, z, stream, fmask, prefetch_depth)
+        return self._bound_from_carry_prog(d)(carry, hyp, z, n_full)
+
+    def streamed_value_and_grad(self, d: int, argnums=(0, 1)):
+        """Streamed (value, grad) of the NEGATIVE bound wrt (hyp, z) —
+        the exact two-pass gradient.
+
+        Pass 1 streams the chunks once to build the reduced Stats S
+        (bitwise the in-memory ones); the cotangent dS of the collapsed
+        bound wrt S is one replicated O(m³) value_and_grad.  Pass 2
+        streams the chunks again, accumulating the (hyp, z) gradient of
+        ``<chunk stats, dS>`` per chunk — the chain rule through the
+        w-linear Stats, so the total equals the in-memory
+        :meth:`make_value_and_grad` up to float re-association (f64
+        tolerance), at O(chunk) residency and two passes over the data.
+        (For per-step training at scale prefer
+        :meth:`streamed_svi_value_and_grad` — one sampled pass.)
+
+        Returns ``step(hyp, z, stream, fmask=None, n_full=None,
+        prefetch_depth=2) -> (val, grads)`` with ``grads`` ordered by
+        ``argnums`` (subset of (0, 1): streamed mu/s gradients would be
+        n-sized, which streaming exists to avoid).
+        """
+        single = not isinstance(argnums, (tuple, list))
+        argnums = (argnums,) if single else tuple(argnums)
+        if not set(argnums) <= {0, 1}:
+            raise ValueError(
+                "streamed gradients support argnums ⊆ (0, 1) (hyp, z): "
+                "mu/s gradients are data-sized — stage those shards in "
+                f"memory instead (got {argnums})")
+
+        def step(hyp, z, stream, fmask=None, n_full=None,
+                 prefetch_depth: int = 2):
+            stream = self.open_stream(stream)
+            if fmask is None:
+                fmask = jnp.ones((self.n_shards,))
+            n_full = float(stream.n) if n_full is None else n_full
+            st = self.streamed_stats(hyp, z, stream, fmask=fmask,
+                                     prefetch_depth=prefetch_depth)
+            val, (g_hyp, g_z, ct) = self._collapse_prog(d)["vg"](
+                hyp, z, st, n_full)
+            progs = self._stream_progs(has_s="s" in stream.fields)
+            for arrs, w in self._stage_stream(stream, prefetch_depth):
+                _, (gh, gz) = progs["chunk_vg"](
+                    hyp, z, arrs["y"], arrs["mu"], arrs.get("s"), w,
+                    fmask, ct)
+                g_hyp = jax.tree.map(jnp.add, g_hyp, gh)
+                g_z = g_z + gz
+            grads = tuple((g_hyp, g_z)[a] for a in argnums)
+            return val, (grads[0] if single else grads)
+
+        return step
+
+    def streamed_svi_value_and_grad(self, d: int, batch_chunks: int,
+                                    argnums=(0, 1)):
+        """Minibatch-stochastic streamed step: sample ``batch_chunks`` of
+        the stream's chunks per step (host-side, without replacement),
+        stage only those, and return an unbiased (value, grad) of the
+        NEGATIVE bound — one pass over O(batch_chunks · chunk) rows per
+        step, independent of n.
+
+        The sampling unit is the *chunk* (every shard visits the same
+        chunk indices — the chunks partition the rows, so reweighting by
+        ``n_chunks / batch_chunks`` is unbiased exactly as the in-memory
+        per-shard block sampling is; the estimators differ only in their
+        correlation structure).  Requires ``failure_mode="drop"`` — the
+        rescale mode's deterministic pre-sampling live count would need a
+        full pass over the stream.
+
+        Returns ``step(hyp, z, stream, key, fmask=None, n_full=None) ->
+        (val, grads)``; ``key`` is a fresh PRNGKey per optimiser step.
+        """
+        import numpy as np
+
+        from .stats import sample_block_indices
+
+        if isinstance(argnums, (tuple, list)):
+            argnums = tuple(argnums)
+        check = argnums if isinstance(argnums, tuple) else (argnums,)
+        if not set(check) <= {0, 1}:
+            raise ValueError(
+                f"streamed gradients support argnums ⊆ (0, 1), got {argnums}")
+        if batch_chunks < 1:
+            raise ValueError(
+                f"batch_chunks must be >= 1, got {batch_chunks}")
+        if self.failure_mode == "rescale":
+            raise NotImplementedError(
+                "streamed SVI supports failure_mode='drop' only: rescale "
+                "needs the deterministic live count, a full data pass")
+
+        cache_key = ("svi", d, argnums)
+        prog = self._stream_cache.get(cache_key)
+        if prog is None:
+            def _neg(hyp, z, y, mu, s, w, fmask, n_full, scale):
+                # Local shapes (B, rows_per_shard_per_chunk, ...): flatten
+                # the staged chunks back to contiguous rows, exact-scan
+                # them, reweight — every Stats field is a per-point sum.
+                idx = _flat_shard_index(self.mesh, self.data_axes)
+                w = w * fmask[idx]
+
+                def flat(a):
+                    return a.reshape((a.shape[0] * a.shape[1],)
+                                     + a.shape[2:])
+
+                st = partial_stats_chunked(
+                    hyp, z, flat(y), flat(mu),
+                    None if s is None else flat(s), weights=flat(w),
+                    latent=self.latent, psi2_fn=self.psi2_fn,
+                    reg_stats_fn=self.reg_stats_fn,
+                    block_size=self.chunk_size, kernel=self.kernel,
+                    force_scan=True)
+                st = st.scale(scale)
+                st = Stats(*(lax.psum(t, self.data_axes) for t in st))
+                st = st._replace(n=n_full)   # drop-mode n handling
+                return -collapsed_bound(hyp, z, st, d, kernel=self.kernel)
+
+            stk = P(None, self.data_axes)
+            rep = self._rep_spec
+            prog = jax.jit(jax.value_and_grad(shard_map(
+                _neg, mesh=self.mesh,
+                in_specs=(rep, rep, stk, stk, stk, stk, rep, rep, rep),
+                out_specs=rep), argnums=argnums))
+            self._stream_cache[cache_key] = prog
+
+        stacked_sharding = NamedSharding(self.mesh, P(None, self.data_axes))
+
+        def step(hyp, z, stream, key, fmask=None, n_full=None):
+            stream = self.open_stream(stream)
+            if fmask is None:
+                fmask = jnp.ones((self.n_shards,))
+            n_full = float(stream.n) if n_full is None else n_full
+            nc = stream.n_chunks
+            B = min(batch_chunks, nc)
+            if B < nc:
+                idxs = np.asarray(sample_block_indices(key, nc, B))
+            else:
+                idxs = np.arange(nc)
+            chunks = [stream.chunk(int(c)) for c in idxs]
+            arrs = {k: jax.device_put(
+                        jnp.asarray(np.stack([c[0][k] for c in chunks])),
+                        stacked_sharding)
+                    for k in stream.fields}
+            w = jax.device_put(jnp.asarray(np.stack([c[1] for c in chunks])),
+                               stacked_sharding)
+            scale = jnp.asarray(nc / B, jnp.float64)
+            return prog(hyp, z, arrs["y"], arrs["mu"], arrs.get("s"), w,
+                        fmask, n_full, scale)
+
+        return step
+
+    def streamed_predictive_state(self, hyp, z, stream, fmask=None,
+                                  jitter: float = DEFAULT_JITTER,
+                                  prefetch_depth: int = 2):
+        """Training-to-serving handoff from a host stream: one streamed
+        exact map-reduce -> the frozen ``serve.PredictiveState`` — the
+        streaming analogue of :meth:`predictive_state`, bitwise the same
+        state (the Stats it is extracted from are bitwise equal)."""
+        from ..serve import extract_state
+
+        st = self.streamed_stats(hyp, z, stream, fmask=fmask,
+                                 prefetch_depth=prefetch_depth)
+        return extract_state(hyp, z, st, jitter=jitter, kernel=self.kernel)
 
     # -- online updates (continual learning) --------------------------------
     def update_stats_fn(self, d: int):

@@ -160,6 +160,8 @@ def partial_stats_chunked(
     key: Array | None = None,
     block_indices: Array | None = None,
     kernel: "cov.Kernel | None" = None,
+    init: Stats | None = None,
+    force_scan: bool = False,
 ) -> Stats:
     """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
 
@@ -195,6 +197,23 @@ def partial_stats_chunked(
       block_indices: explicit (batch_blocks,) block indices, overriding the
         sampler — deterministic replay / subset-enumeration tests / custom
         block samplers plug in here.
+      init: starting carry (rank-proper Stats, e.g. a previous call's
+        return) folded exactly as if this call's blocks continued that
+        scan: the body keeps adding ``carry + block`` left-to-right, so a
+        host-fed outer loop threading ``init`` across fixed-shape chunks
+        (``data.stream``) reproduces the single in-device scan *bitwise* —
+        same float-add association, same per-block program.  Leaf dtypes
+        must match the block output dtypes.  Incompatible with
+        ``batch_blocks`` (the SVI reweighting scales the whole
+        accumulated carry, which would corrupt a prior-chunk ``init``).
+      force_scan: take the ``lax.scan`` path even when the rows fit one
+        block (``n_k <= block_size``), instead of the monolithic
+        short-circuit.  The distributed engine sets this so the bound's
+        producer is a scan boundary regardless of shard size — XLA then
+        compiles the global (post-psum) math identically whether the
+        stats come from an in-device map or a streamed carry, which the
+        streamed/in-memory bitwise-bound contract relies on.  No-op when
+        ``block_size`` is None.
 
     Exact mode is mathematically identical to :func:`partial_stats` (every
     statistic is a plain sum over points), but ``lax.scan``s over
@@ -219,13 +238,18 @@ def partial_stats_chunked(
                 "is a subset of the streaming row blocks")
         if batch_blocks < 1:
             raise ValueError(f"batch_blocks must be >= 1, got {batch_blocks}")
-    if block_size is None or n_k <= block_size:
+        if init is not None:
+            raise ValueError(
+                "init cannot be combined with batch_blocks: the SVI "
+                "reweighting scales the whole carry, prior chunks included")
+    if block_size is None or (n_k <= block_size and not force_scan):
         # Single block (or streaming disabled) — no scan machinery needed.
         # With batch_blocks set this is the nb == 1 degenerate case: the
         # "subset" is the whole data, i.e. the exact statistics.
-        return partial_stats(hyp, z, y, mu, s, weights=weights,
-                             latent=latent, psi2_fn=psi2_fn,
-                             reg_stats_fn=reg_stats_fn, kernel=kernel)
+        st = partial_stats(hyp, z, y, mu, s, weights=weights,
+                           latent=latent, psi2_fn=psi2_fn,
+                           reg_stats_fn=reg_stats_fn, kernel=kernel)
+        return st if init is None else fold_stats(init, st)
 
     w = jnp.ones((n_k,), y.dtype) if weights is None else weights.astype(y.dtype)
     pad = (-n_k) % block_size
@@ -281,11 +305,16 @@ def partial_stats_chunked(
         return Stats(*(c + jnp.atleast_1d(t) for c, t in zip(carry, st))), None
 
     # Carry init matches one block's output dtypes exactly (abstract eval —
-    # works for any psi2_fn backend, including the Pallas kernel).
+    # works for any psi2_fn backend, including the Pallas kernel). A caller
+    # init (host-fed chunk loop) slots in with the same rank-1 promotion,
+    # so continuing a scan here adds the same bits the one-shot scan would.
     shapes = jax.eval_shape(
         block_stats, y_b[0], mu_b[0], None if s is None else s_b[0], w_b[0])
-    init = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
-    out, _ = jax.lax.scan(body, init, xs)
+    if init is None:
+        carry0 = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
+    else:
+        carry0 = Stats(*(jnp.atleast_1d(t) for t in init))
+    out, _ = jax.lax.scan(body, carry0, xs)
     out = Stats(*(t.reshape(sh.shape) for t, sh in zip(out, shapes)))
     # Every Stats field is a per-point sum, so one uniform scale makes the
     # whole tuple (A, B, C, D, KL, n) unbiased for the exact scan. The

@@ -1,5 +1,7 @@
-"""Data substrate: synthetic generators matching the paper's experiments and
-a sharded token pipeline for the LM architectures."""
-from . import synthetic, tokens
+"""Data substrate: synthetic generators matching the paper's experiments, a
+sharded token pipeline for the LM architectures, and the host-streaming
+block-ingestion layer (``data.stream``: memmap/synthetic sources, shard-major
+fixed-shape chunking, double-buffered H2D prefetch)."""
+from . import stream, synthetic, tokens
 
-__all__ = ["synthetic", "tokens"]
+__all__ = ["stream", "synthetic", "tokens"]

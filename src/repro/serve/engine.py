@@ -274,6 +274,70 @@ class PredictEngine:
         mean, var = self.predict(xstar, include_noise=include_noise)
         return np.asarray(mean), np.asarray(var)
 
+    # -- streaming serving --------------------------------------------------
+    def predict_stream(self, queries, include_noise: bool = False,
+                       prefetch_depth: int = 2):
+        """Serve an *iterator* of query batches: yields one ``(mean, var)``
+        pair per batch, in order, without ever materialising the union of
+        the batches on device — the engine's working set stays one padded
+        batch regardless of how long the request stream runs.
+
+        Batch ``i+1``'s staging (pad + ``device_put``, sharded on a mesh
+        engine) happens in a background thread while the jitted block-scan
+        computes batch ``i`` (``data.stream.prefetch`` double buffering),
+        so H2D transfer hides behind compute.  Each yielded pair is
+        bitwise what :meth:`predict` returns for that batch.
+        """
+        from ..data.stream import prefetch
+
+        staged = prefetch(iter(queries), self.pad_queries,
+                          depth=prefetch_depth)
+        for xq, t in staged:
+            mean, var = self._run(self._cstate, xq)
+            mean, var = mean[:t], var[:t]
+            if include_noise:
+                var = var + self._noise_var()
+            yield mean, var
+
+    def sample_stream(self, queries, num_samples: int, key,
+                      include_noise: bool = False, prefetch_depth: int = 2):
+        """Streaming :meth:`sample`: yields ``(num_samples, t_i, d)`` draws
+        per query batch with the same double-buffered staging as
+        :meth:`predict_stream`.
+
+        Per-block PRNG keys are ``fold_in(key, global_block_index)`` where
+        the block index runs over the *concatenated* stream — each batch
+        advances the offset by its padded block count.  When every batch's
+        row count is a multiple of ``n_shards * block_size`` the blocks of
+        the stream are exactly the blocks of the one-shot call, so the
+        concatenated draws are bitwise ``sample(concat(batches))``; ragged
+        batches still get valid independent per-block draws, just under a
+        different key assignment (their padding shifts later offsets).
+        """
+        if num_samples < 1:
+            raise ValueError(f"num_samples must be >= 1, got {num_samples}")
+        if self.compute_dtype.itemsize < 4 \
+                or jnp.dtype(self.state.z.dtype).itemsize < 4:
+            raise ValueError(
+                "sample_stream has the same f32+ state/compute requirement "
+                "as sample (per-block Cholesky; docs/serving.md)")
+        from ..data.stream import prefetch
+
+        key = jnp.asarray(key)
+        prog = self._sample_prog(int(num_samples), bool(include_noise))
+        offset = 0
+        staged = prefetch(iter(queries), self.pad_queries,
+                          depth=prefetch_depth)
+        for xq, t in staged:
+            nb = xq.shape[0] // self.block_size
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                offset + jnp.arange(nb))
+            if self.mesh is not None:
+                keys = jax.device_put(
+                    keys, NamedSharding(self.mesh, self._data_spec))
+            yield prog(self._cstate, xq, keys)[:, :t, :]
+            offset += nb
+
     # -- posterior sampling -------------------------------------------------
     def _sample_prog(self, num_samples: int, include_noise: bool):
         """Compile (and cache) the block-scan sampling program for one

@@ -377,6 +377,59 @@ def main():
                              new_data["y"], new_data["mu"], None, w_new,
                              ones))
 
+    # --- host-streaming ingestion on the mesh ------------------------------
+    # Chunks are staged host->mesh and folded through the sharded carry;
+    # the result must be BITWISE the in-memory reduction (same blocks, same
+    # scan, same single psum), and the per-chunk fold program must contain
+    # NO collective — all communication stays in the final constant-size
+    # reduce, the streaming analogue of the zero-communication map step.
+    st_inmem = eng_c.reduced_stats(d)(hyp, jnp.asarray(z), data_c["y"],
+                                      data_c["mu"], None, w_c, ones)
+    bstream = eng_c.put_data(stream={"y": y, "mu": x}, blocks_per_chunk=2)
+    st_str = eng_c.streamed_stats(hyp, jnp.asarray(z), bstream)
+    for name, a, b_l in zip(st_str._fields, st_inmem, st_str):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_l),
+                                      err_msg=f"streamed != in-memory "
+                                              f"[{name}]")
+    b_inmem = eng_c.bound_fn(d)(hyp, jnp.asarray(z), data_c["y"],
+                                data_c["mu"], None, w_c, ones, nf)
+    b_str = eng_c.streamed_bound(hyp, jnp.asarray(z), bstream, d=d,
+                                 n_full=float(n))
+    assert float(b_str) == float(b_inmem), "streamed bound not bitwise"
+    # streamed two-pass gradient == in-memory gradient (f64 tolerance: the
+    # cotangent contractions reassociate float adds)
+    v_st, (gh_st, gz_st) = eng_c.streamed_value_and_grad(d, argnums=(0, 1))(
+        hyp, jnp.asarray(z), bstream, n_full=float(n))
+    assert abs(float(v_st) - float(v_c)) <= 1e-12 * abs(float(v_c))
+    np.testing.assert_allclose(np.asarray(gz_st), np.asarray(gz_c),
+                               rtol=1e-10, atol=1e-12)
+    for k2 in gh_st:
+        np.testing.assert_allclose(np.asarray(gh_st[k2]),
+                                   np.asarray(gh_c[k2]),
+                                   rtol=1e-10, atol=1e-12)
+    # latent streamed parity on the mesh
+    bstream_l = engl_c.put_data(stream={"y": y, "mu": x, "s": s},
+                                blocks_per_chunk=3)
+    st_l_inmem = engl_c.reduced_stats(d)(hyp, jnp.asarray(z), datal_c["y"],
+                                         datal_c["mu"], datal_c["s"], wl_c,
+                                         ones)
+    st_l_str = engl_c.streamed_stats(hyp, jnp.asarray(z), bstream_l)
+    for a, b_l in zip(st_l_inmem, st_l_str):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_l))
+    # zero-collective fold: only the final reduce may communicate
+    progs = eng_c._stream_progs(has_s=False)
+    from repro.data.stream import stage_to_device
+    arrs0, w0 = stage_to_device(eng_c.data_sharding())(bstream.chunk(0))
+    carry0 = eng_c._init_stream_carry(bstream, hyp, jnp.asarray(z))
+    jaxpr_fold = str(jax.make_jaxpr(
+        lambda *a: progs["fold"](*a))(carry0, hyp, jnp.asarray(z),
+                                      arrs0["y"], arrs0["mu"], None, w0,
+                                      ones))
+    for coll in ("psum", "all_reduce", "all_gather", "all_to_all"):
+        assert coll not in jaxpr_fold, f"streamed fold contains {coll}"
+    assert "psum" in str(jax.make_jaxpr(
+        lambda c: progs["reduce"](c))(carry0))
+
     print("DIST-WORKER-OK")
 
 

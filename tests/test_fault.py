@@ -1,0 +1,87 @@
+"""Fault-tolerance utilities (distributed/fault.py): the failure-mask
+invariants the training loop leans on.
+
+``FailureSimulator.mask`` may kill shards but never the whole fleet (the
+paper's drop mode needs at least one surviving partial sum);
+``apply_gradient_masking``'s rescale is exactly drop * n/n_live; and both
+are deterministic under a fixed seed — reruns of a failure experiment must
+replay the same failure schedule.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.distributed.fault import (FailureSimulator, StepTimer,
+                                     apply_gradient_masking)
+
+
+@pytest.mark.parametrize("rate", [0.0, 0.3, 1.0])
+def test_mask_never_all_dead(rate):
+    sim = FailureSimulator(n_shards=6, rate=rate, seed=0)
+    for _ in range(50):
+        m = sim.mask()
+        assert m.shape == (6,) and m.dtype == np.float64
+        assert set(np.unique(m)) <= {0.0, 1.0}
+        assert m.sum() >= 1.0, "every shard died in one iteration"
+    if rate == 0.0:
+        assert sim.mask().sum() == 6.0
+    if rate == 1.0:
+        assert sim.mask().sum() == 1.0   # exactly the resurrected survivor
+
+
+def test_mask_seeded_determinism():
+    a = [FailureSimulator(5, 0.4, seed=7).mask() for _ in range(1)]
+    sim1, sim2 = FailureSimulator(5, 0.4, seed=7), FailureSimulator(5, 0.4,
+                                                                    seed=7)
+    seq1 = np.stack([sim1.mask() for _ in range(20)])
+    seq2 = np.stack([sim2.mask() for _ in range(20)])
+    np.testing.assert_array_equal(seq1, seq2)
+    seq3 = np.stack([FailureSimulator(5, 0.4, seed=8).mask()
+                     for _ in range(20)])
+    assert not np.array_equal(seq1, seq3)
+    assert np.array_equal(a[0], seq1[0])
+
+
+def _grad_shards(rng, n_shards=5):
+    return [{"w": rng.standard_normal((3, 2)),
+             "b": rng.standard_normal(4)} for _ in range(n_shards)]
+
+
+def test_masking_drop_sums_survivors(rng):
+    shards = _grad_shards(rng)
+    mask = np.array([1.0, 0.0, 1.0, 1.0, 0.0])
+    out = apply_gradient_masking(shards, mask, mode="drop")
+    for k in ("w", "b"):
+        ref = sum(s[k] for s, m in zip(shards, mask) if m > 0)
+        np.testing.assert_allclose(out[k], ref, rtol=1e-15)
+
+
+def test_masking_rescale_is_drop_times_n_over_nlive(rng):
+    shards = _grad_shards(rng)
+    mask = np.array([1.0, 0.0, 1.0, 0.0, 1.0])
+    drop = apply_gradient_masking(shards, mask, mode="drop")
+    resc = apply_gradient_masking(shards, mask, mode="rescale")
+    c = len(shards) / mask.sum()
+    for a, b in zip(jax.tree.leaves(resc), jax.tree.leaves(drop)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b) * c,
+                                   rtol=1e-15)
+    # no failures: the two modes coincide
+    full = np.ones(len(shards))
+    d0 = apply_gradient_masking(shards, full, mode="drop")
+    r0 = apply_gradient_masking(shards, full, mode="rescale")
+    for a, b in zip(jax.tree.leaves(d0), jax.tree.leaves(r0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_step_timer_summary():
+    t = StepTimer()
+    assert t.summary() == {}
+    t.record([1.0, 2.0, 3.0])
+    t.record([2.0, 2.0, 2.0])
+    s = t.summary()
+    assert s["min"] == 1.5 and s["max"] == 2.5 and s["mean"] == 2.0
+    # straggler overhead: mean over iters of max/mean - 1
+    np.testing.assert_allclose(s["straggler_overhead"], (0.5 + 0.0) / 2)
+    outs = t.time_shards([lambda: 1, lambda: 2])
+    assert outs == [1, 2] and len(t.records) == 3

@@ -1,0 +1,474 @@
+"""Host-streaming ingestion: sources, chunking, prefetch, and end-to-end
+parity with the in-memory path.
+
+The streaming contract is *bitwise*, not approximate: a BlockStream chunk
+carries scan blocks [c*bpc, (c+1)*bpc) of every shard's contiguous row
+range, and the per-chunk fold threads the carry into the same
+``lax.scan`` the in-memory map runs — so ``streamed_stats`` must equal
+``reduced_stats`` to the last bit (and ``streamed_bound`` the collapsed
+bound), across block sizes, ragged n, kernel backends, and failure masks.
+Gradients go through a two-pass re-streaming scheme (direct collapse grads
++ per-chunk cotangent contractions), which reassociates float adds — those
+are f64-tolerance, not bitwise.  Serving parity: ``predict_stream`` /
+``sample_stream`` vs the one-shot engine calls.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import DistributedGP
+from repro.core.stats import Stats
+from repro.data.stream import (ArraySource, BlockStream, MemmapSource,
+                               SyntheticSource, as_source, open_npz_memmaps,
+                               padded_rows, prefetch)
+from repro.launch.mesh import make_compat_mesh
+
+
+def _mk_hyp(q):
+    return {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.full((q,), 0.1),
+            "log_beta": jnp.asarray(1.0)}
+
+
+def _mk_data(rng, n, q=2, d=2, latent=False):
+    arrs = {"mu": rng.standard_normal((n, q)),
+            "y": rng.standard_normal((n, d))}
+    if latent:
+        arrs["s"] = rng.uniform(0.05, 0.6, (n, q))
+    return arrs
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_compat_mesh((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def eng8(mesh1):
+    """Module-shared regression engine (chunk_size=8) — jit caches persist
+    across tests, keeping the module cheap."""
+    return DistributedGP(mesh1, data_axes=("data",), latent=False,
+                         chunk_size=8)
+
+
+def _assert_stats_bitwise(a: Stats, b: Stats):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+# -- sources -----------------------------------------------------------------
+
+def test_array_source_validates_and_reads(rng):
+    arrs = _mk_data(rng, 11)
+    src = ArraySource(arrs)
+    assert src.n == 11 and src.fields == {"mu": (2,), "y": (2,)}
+    out = src.read(3, 9)
+    np.testing.assert_array_equal(out["y"], arrs["y"][3:9])
+    with pytest.raises(ValueError):
+        ArraySource({"a": np.ones((5, 2)), "b": np.ones((6, 2))})
+
+
+def test_memmap_source_npy_roundtrip(rng, tmp_path):
+    arrs = _mk_data(rng, 23)
+    paths = {}
+    for k, v in arrs.items():
+        paths[k] = tmp_path / f"{k}.npy"
+        np.save(paths[k], v)
+    src = MemmapSource(paths)
+    assert src.n == 23
+    out = src.read(5, 18)
+    for k in arrs:
+        np.testing.assert_array_equal(out[k], arrs[k][5:18])
+        assert isinstance(out[k], np.ndarray)
+
+
+def test_npz_memmap_zero_copy(rng, tmp_path):
+    """Uncompressed npz members are mmapped in place via their zip offsets;
+    compressed ones fall back to a full (correct) load."""
+    arrs = _mk_data(rng, 17)
+    p_stored = tmp_path / "data.npz"
+    np.savez(p_stored, **arrs)
+    mm = open_npz_memmaps(p_stored)
+    for k in arrs:
+        assert isinstance(mm[k], np.memmap), "ZIP_STORED member must mmap"
+        np.testing.assert_array_equal(np.asarray(mm[k]), arrs[k])
+    src = MemmapSource.from_npz(p_stored)
+    out = src.read(2, 13)
+    np.testing.assert_array_equal(out["mu"], arrs["mu"][2:13])
+
+    p_comp = tmp_path / "data_c.npz"
+    np.savez_compressed(p_comp, **arrs)
+    mm_c = open_npz_memmaps(p_comp)
+    for k in arrs:
+        np.testing.assert_array_equal(np.asarray(mm_c[k]), arrs[k])
+
+
+def test_synthetic_source_pure_and_validated():
+    src = SyntheticSource(100, lambda a, b: {"y": np.arange(a, b,
+                                                            dtype=np.float64)
+                                             [:, None]},
+                          fields={"y": (1,)})
+    np.testing.assert_array_equal(src.read(7, 12)["y"][:, 0],
+                                  np.arange(7, 12))
+    bad = SyntheticSource(100, lambda a, b: {"y": np.zeros((3, 1))},
+                          fields={"y": (1,)})
+    with pytest.raises(ValueError):
+        bad.read(0, 5)
+
+
+def test_as_source_accepts_dict_stream_and_ducks(rng):
+    arrs = _mk_data(rng, 10)
+    assert isinstance(as_source(arrs), ArraySource)
+    src = ArraySource(arrs)
+    assert as_source(src) is src
+
+    class Duck:
+        n = 10
+        fields = {"y": (2,)}
+
+        def read(self, a, b):
+            return {"y": np.zeros((b - a, 2))}
+
+    duck = Duck()
+    assert as_source(duck) is duck
+    with pytest.raises(TypeError):
+        as_source(42)
+
+
+# -- geometry ----------------------------------------------------------------
+
+def test_padded_rows():
+    assert padded_rows(10, 4) == 12
+    assert padded_rows(8, 4) == 8
+    assert padded_rows(1, 4) == 4
+    assert padded_rows(0, 4) == 4   # never a zero-block layout
+
+
+@pytest.mark.parametrize("n,n_shards,block,bpc", [
+    (101, 4, 8, 1),
+    (101, 4, 8, 2),
+    (64, 2, 8, 100),   # bpc overshoots -> clamped to blocks_per_shard
+    (5, 4, 8, 1),      # n < n_shards*block: pads up to one block per shard
+])
+def test_blockstream_geometry_and_coverage(rng, n, n_shards, block, bpc):
+    arrs = _mk_data(rng, n)
+    bs = BlockStream(ArraySource(arrs), n_shards=n_shards, block_size=block,
+                     blocks_per_chunk=bpc)
+    assert bs.n_pad % (n_shards * block) == 0 and bs.n_pad >= max(n, 1)
+    assert bs.blocks_per_chunk <= bs.blocks_per_shard
+    assert bs.n_chunks * bs.blocks_per_chunk >= bs.blocks_per_shard
+    # Reassembling every chunk shard-major recovers the padded row order of
+    # pad_and_shard: real rows in order, pad rows weighted 0.
+    rows = np.zeros((bs.n_pad, 2))
+    weights = np.zeros(bs.n_pad)
+    rps = bs.rows_per_shard
+    cr = bs.shard_chunk_rows
+    for c, (chunk, w) in enumerate(bs):
+        assert chunk["y"].shape == (bs.chunk_rows, 2)
+        assert w.shape == (bs.chunk_rows,)
+        for s in range(n_shards):
+            lo = s * rps + c * cr
+            rows[lo:lo + cr] = chunk["y"][s * cr:(s + 1) * cr]
+            weights[lo:lo + cr] = w[s * cr:(s + 1) * cr]
+    np.testing.assert_array_equal(rows[:n], arrs["y"])
+    np.testing.assert_array_equal(weights[:n], np.ones(n))
+    np.testing.assert_array_equal(weights[n:], np.zeros(bs.n_pad - n))
+
+
+def test_blockstream_pads_s_log_safe(rng):
+    arrs = _mk_data(rng, 5, latent=True)
+    bs = BlockStream(ArraySource(arrs), n_shards=2, block_size=4)
+    chunk, w = bs.chunk(0)
+    pad = np.asarray(w) == 0.0
+    assert pad.any()
+    np.testing.assert_array_equal(chunk["s"][pad], 1.0)   # log-safe
+    np.testing.assert_array_equal(chunk["y"][pad], 0.0)
+
+
+# -- prefetch ----------------------------------------------------------------
+
+def test_prefetch_preserves_order_and_maps():
+    out = list(prefetch(range(20), fn=lambda i: i * i, depth=3))
+    assert out == [i * i for i in range(20)]
+    assert list(prefetch(iter("abc"))) == list("abc")
+
+
+def test_prefetch_propagates_errors():
+    def gen():
+        yield 1
+        yield 2
+        raise RuntimeError("source died")
+
+    it = prefetch(gen(), fn=lambda x: x, depth=2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="source died"):
+        list(it)
+
+
+def test_prefetch_fn_error_propagates():
+    def boom(x):
+        if x == 3:
+            raise ValueError("bad chunk")
+        return x
+
+    with pytest.raises(ValueError, match="bad chunk"):
+        list(prefetch(range(6), fn=boom, depth=2))
+
+
+# -- put_data wiring ---------------------------------------------------------
+
+def test_put_data_stream_wiring(rng, eng8):
+    arrs = _mk_data(rng, 40)
+    bs = eng8.put_data(stream=arrs, blocks_per_chunk=2)
+    assert isinstance(bs, BlockStream)
+    assert bs.n_shards == eng8.n_shards and bs.block_size == eng8.chunk_size
+    # an already-built matching BlockStream passes through
+    assert eng8.open_stream(bs) is bs
+    # mismatched geometry is rejected
+    wrong = BlockStream(ArraySource(arrs), n_shards=eng8.n_shards + 1,
+                        block_size=eng8.chunk_size)
+    with pytest.raises(ValueError):
+        eng8.open_stream(wrong)
+    with pytest.raises(ValueError):
+        eng8.put_data(stream=arrs, y=arrs["y"])   # stream XOR arrays
+    eng_nochunk = DistributedGP(make_compat_mesh((1,), ("data",)),
+                                data_axes=("data",), latent=False)
+    with pytest.raises(ValueError):
+        eng_nochunk.put_data(stream=arrs)
+
+
+# -- streamed == in-memory: stats / bound / grads ----------------------------
+
+def _inmem_reference(eng, hyp, z, arrs, d, fmask=None, n_full=None):
+    data, w = eng.put_data(**arrs)
+    fm = jnp.ones((eng.n_shards,)) if fmask is None else fmask
+    st = eng.reduced_stats(d=d)(hyp, z, data["y"], data["mu"],
+                                data.get("s"), w, fm)
+    b = eng.bound_fn(d=d)(hyp, z, data["y"], data["mu"], data.get("s"), w,
+                          fm, n_full if n_full is not None
+                          else float(arrs["y"].shape[0]))
+    return data, w, st, b
+
+
+@pytest.mark.parametrize("n,bpc", [(100, 1), (100, 3), (5, 1), (16, 2)])
+def test_streamed_stats_and_bound_bitwise(rng, eng8, n, bpc):
+    q, d = 2, 2
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((5, q)))
+    _, _, st_mem, b_mem = _inmem_reference(eng8, hyp, z, arrs, d)
+    bs = eng8.put_data(stream=arrs, blocks_per_chunk=bpc)
+    st = eng8.streamed_stats(hyp, z, bs)
+    _assert_stats_bitwise(st_mem, st)
+    b = eng8.streamed_bound(hyp, z, bs, d=d, n_full=float(n))
+    assert float(b) == float(b_mem)
+
+
+def test_streamed_latent_bitwise(rng, mesh1):
+    q, d, n = 2, 3, 57
+    eng = DistributedGP(mesh1, data_axes=("data",), latent=True,
+                        chunk_size=8)
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d, latent=True)
+    z = jnp.asarray(rng.standard_normal((4, q)))
+    _, _, st_mem, b_mem = _inmem_reference(eng, hyp, z, arrs, d)
+    bs = eng.put_data(stream=arrs, blocks_per_chunk=2)
+    _assert_stats_bitwise(st_mem, eng.streamed_stats(hyp, z, bs))
+    assert float(eng.streamed_bound(hyp, z, bs, d=d, n_full=float(n))) \
+        == float(b_mem)
+
+
+def test_streamed_pallas_backend_bitwise(rng, mesh1):
+    q, d, n = 2, 1, 48
+    eng = DistributedGP(mesh1, data_axes=("data",), latent=False,
+                        chunk_size=8, kernel_backend="pallas")
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((4, q)))
+    _, _, st_mem, _ = _inmem_reference(eng, hyp, z, arrs, d)
+    bs = eng.put_data(stream=arrs, blocks_per_chunk=2)
+    _assert_stats_bitwise(st_mem, eng.streamed_stats(hyp, z, bs))
+
+
+def test_streamed_fmask_and_rescale(rng, mesh1):
+    """Failure masks kill a shard's stream contribution exactly as they kill
+    its in-memory partial sums; rescale-mode bound matches too."""
+    q, d, n = 2, 2, 40
+    for mode in ("drop", "rescale"):
+        eng = DistributedGP(mesh1, data_axes=("data",), latent=False,
+                            chunk_size=8, failure_mode=mode)
+        hyp = _mk_hyp(q)
+        arrs = _mk_data(rng, n, q=q, d=d)
+        z = jnp.asarray(rng.standard_normal((4, q)))
+        fm = jnp.ones((1,))
+        _, _, st_mem, b_mem = _inmem_reference(eng, hyp, z, arrs, d,
+                                               fmask=fm)
+        bs = eng.put_data(stream=arrs)
+        _assert_stats_bitwise(st_mem,
+                              eng.streamed_stats(hyp, z, bs, fmask=fm))
+        assert float(eng.streamed_bound(hyp, z, bs, d=d, fmask=fm,
+                                        n_full=float(n))) == float(b_mem)
+
+
+def test_streamed_value_and_grad_f64(rng, eng8):
+    q, d, n = 2, 2, 90
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((5, q)))
+    data, w, _, _ = _inmem_reference(eng8, hyp, z, arrs, d)
+    ones = jnp.ones((eng8.n_shards,))
+    nf = float(n)
+    v_mem, g_mem = eng8.make_value_and_grad(d=d, argnums=(0, 1))(
+        hyp, z, data["mu"], None, data["y"], w, ones, nf)
+    bs = eng8.put_data(stream=arrs, blocks_per_chunk=2)
+    v_str, g_str = eng8.streamed_value_and_grad(d=d, argnums=(0, 1))(
+        hyp, z, bs, n_full=nf)
+    assert abs(float(v_mem) - float(v_str)) <= 1e-12 * abs(float(v_mem))
+    for a, b in zip(jax.tree.leaves(g_mem), jax.tree.leaves(g_str)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-12)
+    # single-argnum variant returns a bare grad, not a tuple
+    _, gz = eng8.streamed_value_and_grad(d=d, argnums=1)(hyp, z, bs,
+                                                         n_full=nf)
+    np.testing.assert_array_equal(np.asarray(gz),
+                                  np.asarray(g_str[1]))
+
+
+def test_streamed_svi_full_batch_equals_exact(rng, eng8):
+    q, d, n = 2, 2, 70
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((4, q)))
+    bs = eng8.put_data(stream=arrs, blocks_per_chunk=1)
+    svi = eng8.streamed_svi_value_and_grad(d=d, batch_chunks=bs.n_chunks)
+    v_svi, g_svi = svi(hyp, z, bs, jax.random.PRNGKey(0))
+    v_ex, g_ex = eng8.streamed_value_and_grad(d=d)(hyp, z, bs)
+    assert abs(float(v_svi) - float(v_ex)) <= 1e-9 * abs(float(v_ex))
+    for a, b in zip(jax.tree.leaves(g_svi), jax.tree.leaves(g_ex)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-8, atol=1e-10)
+    # sampled steps: finite, key-deterministic, key-sensitive
+    svi2 = eng8.streamed_svi_value_and_grad(d=d, batch_chunks=2)
+    va, _ = svi2(hyp, z, bs, jax.random.PRNGKey(1))
+    vb, _ = svi2(hyp, z, bs, jax.random.PRNGKey(1))
+    vc, _ = svi2(hyp, z, bs, jax.random.PRNGKey(2))
+    assert np.isfinite(float(va)) and float(va) == float(vb)
+    assert float(va) != float(vc)
+
+
+def test_streamed_svi_rejects_rescale(rng, mesh1):
+    eng = DistributedGP(mesh1, data_axes=("data",), latent=False,
+                        chunk_size=8, failure_mode="rescale")
+    with pytest.raises(NotImplementedError):
+        eng.streamed_svi_value_and_grad(d=1, batch_chunks=2)
+
+
+def test_streamed_from_memmap_source(rng, eng8, tmp_path):
+    """End to end from files on disk: mmap npz -> BlockStream -> bitwise
+    parity with the in-memory ingest of the same arrays."""
+    q, d, n = 2, 2, 33
+    arrs = _mk_data(rng, n, q=q, d=d)
+    np.savez(tmp_path / "train.npz", **arrs)
+    hyp = _mk_hyp(q)
+    z = jnp.asarray(rng.standard_normal((4, q)))
+    _, _, st_mem, _ = _inmem_reference(eng8, hyp, z, arrs, d)
+    src = MemmapSource.from_npz(tmp_path / "train.npz")
+    bs = eng8.put_data(stream=src, blocks_per_chunk=2)
+    _assert_stats_bitwise(st_mem, eng8.streamed_stats(hyp, z, bs))
+
+
+# -- serving: query streams --------------------------------------------------
+
+def _serve_engine(rng, n=60, m=7, q=2, d=2, block=8):
+    from repro.core.stats import partial_stats
+    from repro.serve import PredictEngine, extract_state
+
+    hyp = _mk_hyp(q)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    state = extract_state(hyp, z, partial_stats(hyp, z, y, x, s=None,
+                                                latent=False))
+    return PredictEngine(state, block_size=block)
+
+
+def test_predict_stream_bitwise(rng):
+    eng = _serve_engine(rng)
+    batches = [np.asarray(rng.standard_normal((t, 2)))
+               for t in (5, 16, 1, 9)]
+    outs = list(eng.predict_stream(iter(batches), include_noise=True))
+    assert len(outs) == len(batches)
+    for xb, (mean, var) in zip(batches, outs):
+        m_ref, v_ref = eng.predict(jnp.asarray(xb), include_noise=True)
+        assert mean.shape == (xb.shape[0], 2)
+        np.testing.assert_array_equal(np.asarray(mean), np.asarray(m_ref))
+        np.testing.assert_array_equal(np.asarray(var), np.asarray(v_ref))
+
+
+def test_sample_stream_matches_one_shot(rng):
+    """Streamed sampling folds the key with the *global* block index: on
+    block-aligned batches the concatenated streamed samples are bitwise the
+    one-shot ``sample`` of the concatenated queries."""
+    eng = _serve_engine(rng, block=8)
+    batches = [np.asarray(rng.standard_normal((16, 2))) for _ in range(3)]
+    key = jax.random.PRNGKey(4)
+    smp = list(eng.sample_stream(iter(batches), 3, key, include_noise=True))
+    ref = eng.sample(jnp.asarray(np.concatenate(batches)), 3, key,
+                     include_noise=True)
+    np.testing.assert_array_equal(np.concatenate([np.asarray(s) for s in smp],
+                                                 axis=1), np.asarray(ref))
+    with pytest.raises(ValueError):
+        next(iter(eng.sample_stream(iter(batches), 0, key)))
+
+
+def test_streamed_predictive_state_serves(rng, eng8):
+    """Train-side streamed state == in-memory state, end to end through the
+    serving engine."""
+    from repro.serve import PredictEngine
+
+    q, d, n = 2, 2, 50
+    hyp = _mk_hyp(q)
+    arrs = _mk_data(rng, n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((5, q)))
+    data, w, _, _ = _inmem_reference(eng8, hyp, z, arrs, d)
+    state_mem = eng8.predictive_state(hyp, z, data["y"], data["mu"], None, w)
+    bs = eng8.put_data(stream=arrs, blocks_per_chunk=2)
+    state_str = eng8.streamed_predictive_state(hyp, z, bs)
+    for a, b in zip(jax.tree.leaves(state_mem), jax.tree.leaves(state_str)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    xs = jnp.asarray(rng.standard_normal((9, q)))
+    m0, v0 = PredictEngine(state_mem, block_size=8).predict(xs)
+    m1, v1 = PredictEngine(state_str, block_size=8).predict(xs)
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+# -- property: any geometry, still bitwise -----------------------------------
+
+@pytest.mark.statistical
+def test_property_streamed_bitwise_any_geometry(eng8):
+    """hypothesis: for ANY (n, bpc, seed) the streamed Stats equal the
+    in-memory reduction bitwise on the shared engine geometry."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                        "(pip install -r requirements-dev.txt)")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 120), bpc=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    def prop(n, bpc, seed):
+        r = np.random.default_rng(seed)
+        q, d = 2, 2
+        hyp = _mk_hyp(q)
+        arrs = _mk_data(r, n, q=q, d=d)
+        z = jnp.asarray(r.standard_normal((5, q)))
+        _, _, st_mem, b_mem = _inmem_reference(eng8, hyp, z, arrs, d)
+        bs = eng8.put_data(stream=arrs, blocks_per_chunk=bpc)
+        _assert_stats_bitwise(st_mem, eng8.streamed_stats(hyp, z, bs))
+        assert float(eng8.streamed_bound(hyp, z, bs, d=d,
+                                         n_full=float(n))) == float(b_mem)
+
+    prop()

@@ -126,6 +126,28 @@ def test_pad_and_shard_block_multiple():
     assert (out["s"][101:] == 1.0).all()  # variance padding stays log-safe
 
 
+@pytest.mark.parametrize("n", [0, 1, 5, 63])
+def test_pad_and_shard_tiny_n_regression(n):
+    """n < n_shards*block must still pad to one whole block per shard (a
+    zero-row or ragged layout would break the fixed-shape scan), with the
+    weights masking exactly the pad rows and unpad round-tripping."""
+    from repro.core.distributed import unpad
+
+    n_shards, block = 4, 16
+    arrs = {"y": np.arange(3 * n, dtype=np.float64).reshape(n, 3),
+            "mu": np.ones((n, 2))}
+    out, w = pad_and_shard(arrs, n_shards=n_shards, block=block)
+    assert out["y"].shape[0] == 64          # one full block per shard
+    assert w.shape == (64,)
+    np.testing.assert_array_equal(np.asarray(w),
+                                  (np.arange(64) < n).astype(np.float64))
+    back = unpad(out, n)
+    np.testing.assert_array_equal(np.asarray(back["y"]), arrs["y"])
+    np.testing.assert_array_equal(np.asarray(back["mu"]), arrs["mu"])
+    # single-array form
+    np.testing.assert_array_equal(np.asarray(unpad(out["y"], n)), arrs["y"])
+
+
 def test_sgpr_gplvm_chunk_size_bound_parity(rng):
     x, y = make_regression(rng, n=70, q=2, d=2)
     mono = SGPR(x, y, num_inducing=10, seed=0)
