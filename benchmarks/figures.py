@@ -280,7 +280,8 @@ def lm_train_microbench(arch="llama3.2-1b", steps=5):
     return [(f"lm/{arch}_step", dt * 1e6, f"{tok_s:.0f} tok/s")]
 
 
-# Beyond-paper serving benchmarks (`--only predict` / `--only serve_ext`):
-# live in serving.py but are re-exported here so the figure/bench namespace
-# stays one-stop.
-from .serving import predict_serving, serving_extensions  # noqa: E402,F401
+# Beyond-paper serving benchmarks (`--only predict` / `--only serve_ext` /
+# `--only frontend`): live in serving.py but are re-exported here so the
+# figure/bench namespace stays one-stop.
+from .serving import (frontend_serving, predict_serving,  # noqa: E402,F401
+                      serving_extensions)

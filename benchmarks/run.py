@@ -23,6 +23,7 @@ ALL = {
     "svi": streaming.svi_map,
     "predict": serving.predict_serving,
     "serve_ext": serving.serving_extensions,
+    "frontend": serving.frontend_serving,
     "kernelzoo": kernelzoo.kernel_zoo,
     "online": online.online_updates,
 }
@@ -46,6 +47,8 @@ FAST_ARGS = {
                     block=128, iters=2),
     "serve_ext": dict(n=4096, m=32, t=256, block=64, s_sweep=(1, 8, 32),
                       n_models_sweep=(1, 2, 4), iters=2),
+    "frontend": dict(n=4096, m=32, block=32, t_req=4, duration_s=1.0,
+                     overload=4.0, swap_every_ms=100.0),
     "kernelzoo": dict(n=4096, m=32, t=512, block=512, iters=2),
     "online": dict(m=16, k=8, n_sweep=(1_000, 4_000), k_sweep=(1, 8),
                    iters=2),

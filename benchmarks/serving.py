@@ -21,6 +21,7 @@ Parity of every path against ``bound.predict`` is asserted as it runs.
 """
 from __future__ import annotations
 
+import asyncio
 import time
 
 import jax
@@ -29,8 +30,8 @@ import numpy as np
 
 from repro.core import bound as bound_mod
 from repro.core.stats import partial_stats
-from repro.serve import (MultiPredictEngine, PredictEngine, extract_state,
-                         stack_states)
+from repro.serve import (Frontend, MultiPredictEngine, PredictEngine,
+                         QueueFull, SLOExceeded, extract_state, stack_states)
 
 from .gp_common import default_hyp
 
@@ -195,4 +196,191 @@ def serving_extensions(n=20_000, q=3, d=2, m=64, t=1024, block=256,
         print(f"  ensemble N={n_models}: vmap {dt_m * 1e3:8.2f} ms  "
               f"{n_models} engines {dt_n * 1e3:8.2f} ms  "
               f"({dt_n / dt_m:4.2f}x)")
+    return rows
+
+
+# -- the serving front-end under open-loop load -----------------------------
+
+async def _poisson_load(fe: Frontend, queries, interarrival, deadline_ms):
+    """Open-loop arrivals: submit query i at its scheduled absolute time
+    regardless of completions (the load does not slow down because the
+    server is struggling — the honest regime, vs closed-loop generators
+    that flatter a saturated server).  Returns per-request records
+    ``(status, latency_s, x, result)``."""
+
+    async def one(x):
+        t0 = time.monotonic()
+        try:
+            r = await fe.submit(x, deadline_ms=deadline_ms)
+        except (SLOExceeded, QueueFull) as e:
+            return (type(e).__name__, time.monotonic() - t0, x, None)
+        lat = time.monotonic() - t0
+        ok = lat * 1e3 <= deadline_ms
+        return ("ok" if ok else "late", lat, x, r)
+
+    start = time.monotonic()
+    tasks = []
+    t_next = 0.0
+    for x, gap in zip(queries, interarrival):
+        delay = start + t_next - time.monotonic()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tasks.append(asyncio.ensure_future(one(x)))
+        t_next += gap
+    return await asyncio.gather(*tasks)
+
+
+def _goodput_stats(records, duration):
+    ok = [r for r in records if r[0] == "ok"]
+    lats = np.asarray([r[1] for r in records if r[3] is not None])
+    by_status = {}
+    for r in records:
+        by_status[r[0]] = by_status.get(r[0], 0) + 1
+    return {
+        "offered": len(records),
+        "goodput_rps": len(ok) / duration,
+        "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats.size else np.nan,
+        "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats.size else np.nan,
+        "by_status": by_status,
+    }
+
+
+def frontend_serving(n=8_000, q=3, d=2, m=64, block=64, t_req=8,
+                     deadline_ms=50.0, duration_s=2.0, overload=4.0,
+                     max_wait_ms=2.0, batch_blocks=8, swap_every_ms=150.0,
+                     seed=11):
+    """The micro-batching front-end under open-loop Poisson load
+    (docs/serving.md "Request batching & SLOs"): goodput and p50/p99
+    latency at ``overload``x the naive per-request path's capacity, naive
+    vs continuous batching, plus a mid-load hot-swap correctness gate —
+    zero dropped and zero wrong-state responses, every response verified
+    bitwise against a direct engine call on its generation's state."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    hyp, z, stats = _fit_state(rng, n, m, q, d)
+    state_a = extract_state(hyp, z, stats)
+    hyp_b = {k: (v + 0.05 if k == "log_sf2" else v) for k, v in hyp.items()}
+    state_b = extract_state(hyp_b, z, stats)
+
+    # -- calibrate: the naive path's sequential capacity --------------------
+    async def calibrate():
+        fe = Frontend(PredictEngine(state_a, block_size=block),
+                      max_wait_ms=0.0, max_batch_requests=1).start()
+        fe.warmup()
+        xs = rng.standard_normal((t_req, q))
+        await fe.submit(xs)                      # warm end-to-end
+        t0 = time.perf_counter()
+        reps = 50
+        for _ in range(reps):
+            await fe.submit(xs)
+        dt = (time.perf_counter() - t0) / reps
+        await fe.stop()
+        return dt
+
+    t_naive = asyncio.run(calibrate())
+    rate = overload / t_naive
+    n_req = int(rate * duration_s) + 1
+    queries = [rng.standard_normal((t_req, q)) for _ in range(n_req)]
+    interarrival = rng.exponential(1.0 / rate, size=n_req)
+    print(f"  naive service time {t_naive * 1e3:.2f} ms/req -> offered load "
+          f"{rate:.0f} req/s ({overload:.0f}x naive capacity), "
+          f"deadline {deadline_ms:.0f} ms")
+
+    # -- naive vs batched under the same offered load -----------------------
+    async def run_path(batched: bool):
+        fe = Frontend(
+            PredictEngine(state_a, block_size=block),
+            max_wait_ms=max_wait_ms if batched else 0.0,
+            max_batch_rows=batch_blocks * block if batched else block,
+            max_batch_requests=None if batched else 1).start()
+        fe.warmup()                              # compile all batch shapes
+        await fe.submit(queries[0])              # warm end-to-end
+        recs = await _poisson_load(fe, queries, interarrival, deadline_ms)
+        await fe.stop()
+        return recs, fe.metrics.summary()
+
+    stats_by_path = {}
+    for name, batched in (("naive", False), ("batched", True)):
+        recs, summ = asyncio.run(run_path(batched))
+        st = _goodput_stats(recs, duration_s)
+        stats_by_path[name] = st
+        rows.append((f"frontend/{name}_rate={rate:.0f}",
+                     st["p99_ms"] * 1e3,
+                     f"goodput_rps={st['goodput_rps']:.0f};"
+                     f"p50_ms={st['p50_ms']:.2f};p99_ms={st['p99_ms']:.2f};"
+                     f"statuses={st['by_status']};"
+                     f"mean_batch={summ['mean_batch_requests']:.1f}"))
+        print(f"  {name:>8}: goodput {st['goodput_rps']:8.0f} req/s   "
+              f"p50 {st['p50_ms']:7.2f} ms  p99 {st['p99_ms']:7.2f} ms   "
+              f"{st['by_status']}   mean batch "
+              f"{summ['mean_batch_requests']:.1f} req")
+    gain = (stats_by_path["batched"]["goodput_rps"]
+            / max(stats_by_path["naive"]["goodput_rps"], 1e-9))
+    assert gain >= 3.0, (
+        f"continuous batching should sustain >= 3x the per-request goodput "
+        f"under {overload:.0f}x overload, got {gain:.2f}x")
+    assert (stats_by_path["batched"]["p99_ms"]
+            <= stats_by_path["naive"]["p99_ms"]), (
+        "batched p99 should not exceed the saturated per-request p99")
+    rows.append(("frontend/goodput_gain", 0.0,
+                 f"batched_vs_naive={gain:.2f}x"))
+
+    # -- mid-load hot swap: zero dropped, zero wrong-state ------------------
+    async def run_swap():
+        fe = Frontend(PredictEngine(state_a, block_size=block),
+                      max_wait_ms=max_wait_ms,
+                      max_batch_rows=batch_blocks * block).start()
+        fe.warmup()                              # compile all batch shapes
+        await fe.submit(queries[0])              # warm end-to-end
+        states = {fe.generation: state_a}
+        stop_swapping = asyncio.Event()
+
+        async def swapper():
+            flip = [state_b, state_a]
+            k = 0
+            while not stop_swapping.is_set():
+                try:
+                    await asyncio.wait_for(stop_swapping.wait(),
+                                           timeout=swap_every_ms / 1e3)
+                except asyncio.TimeoutError:
+                    pass
+                else:
+                    break
+                gen = fe.swap_state(flip[k % 2])
+                states[gen] = flip[k % 2]
+                k += 1
+            return k
+
+        sw = asyncio.ensure_future(swapper())
+        # moderate load: half the overload, so the queue stays live but sane
+        gaps = rng.exponential(2.0 * t_naive / overload, size=n_req)
+        recs = await _poisson_load(fe, queries, gaps, deadline_ms)
+        stop_swapping.set()
+        n_swaps = await sw
+        await fe.stop()
+        return recs, states, n_swaps
+
+    recs, states, n_swaps = asyncio.run(run_swap())
+    ref_engines = {g: PredictEngine(s, block_size=block)
+                   for g, s in states.items()}
+    served = [r for r in recs if r[3] is not None]
+    wrong = 0
+    for _, _, x, res in served:
+        ref_m, ref_v = ref_engines[res.generation].predict(x)
+        if not (np.array_equal(res.mean, np.asarray(ref_m))
+                and np.array_equal(res.var, np.asarray(ref_v))):
+            wrong += 1
+    dropped = len(recs) - len(served) - sum(
+        1 for r in recs if r[0] in ("SLOExceeded", "QueueFull"))
+    gens = sorted({r[3].generation for r in served})
+    print(f"  hot swap: {n_swaps} swaps mid-load, {len(served)} responses "
+          f"across generations {gens}: {wrong} wrong-state, "
+          f"{dropped} dropped")
+    assert n_swaps >= 1, "swap section never swapped — lengthen duration_s"
+    assert wrong == 0, f"{wrong} responses mismatched their generation's state"
+    assert dropped == 0, f"{dropped} requests vanished without a typed error"
+    rows.append(("frontend/hot_swap", 0.0,
+                 f"swaps={n_swaps};responses={len(served)};"
+                 f"generations={len(gens)};wrong_state={wrong};"
+                 f"dropped={dropped}"))
     return rows

@@ -77,10 +77,23 @@ def restore(path: str | pathlib.Path, like) -> tuple[Any, dict]:
     data = np.load(path.with_suffix(".npz"))
     meta = json.loads(path.with_suffix(".json").read_text())
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    # The sidecar records how many leaves were written; restoring into a
+    # template with a different count means the checkpoint is for another
+    # structure (or a partial/corrupt write) — a hot state swap must fail
+    # loudly here, not silently unflatten a subset.
+    n_saved = meta.get("n_leaves")
+    if n_saved is not None and n_saved != len(paths):
+        raise ValueError(
+            f"checkpoint {path} holds {n_saved} leaves but the restore "
+            f"template has {len(paths)} — wrong artifact for this tree")
     leaves = []
     for p, leaf in paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
+        if key not in data:
+            raise KeyError(
+                f"checkpoint {path} is missing leaf {key!r} — wrong or "
+                "partial artifact")
         arr = data[key]
         want = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else arr.dtype
         if want == _BF16 and arr.dtype == np.uint16:

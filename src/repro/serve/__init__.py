@@ -17,22 +17,36 @@ batched/sharded low-latency predict, sample, and multi-model engines.
               stored factors, O(m²k), guarded fallback to refactorisation)
               — paired with ``PredictEngine.ingest``/``forget``/
               ``swap_state`` for the ingest-update-serve loop
+  frontend    Frontend: the production request path — async continuous
+              micro-batching over a bounded queue (coalesce concurrent
+              requests into the engine's padded block shapes, flush on
+              batch-full or max_wait_ms), admission control + per-request
+              deadlines (typed QueueFull / SLOExceeded, never silent), and
+              zero-downtime hot state swap with a generation fence
+  slo         constant-memory serving SLO accounting: QuantileSketch
+              (geometric-bucket streaming p50/p99) + SLOMetrics
+              (wait/engine/e2e phases, throughput vs goodput, snapshot/merge)
 
 See docs/serving.md for the serving guide and tuning tables.
 """
-from . import engine, online, posterior
+from . import engine, frontend, online, posterior, slo
 from .engine import (MultiPredictEngine, PredictEngine, mixture_moments,
                      stack_states)
+from .frontend import (Frontend, FrontendError, QueueFull, ServeResult,
+                       SLOExceeded)
 from .online import (RefreshResult, downdate_state, refresh_state,
                      update_state)
 from .posterior import (PredictiveState, extract_state, load_state,
                         predict_full_cov, predict_mean_var, sample_block,
                         sample_joint, save_state, state_from_model)
+from .slo import QuantileSketch, SLOMetrics
 
 __all__ = [
-    "engine", "online", "posterior", "PredictEngine", "MultiPredictEngine",
-    "PredictiveState", "RefreshResult", "downdate_state", "extract_state",
-    "load_state", "mixture_moments", "predict_full_cov", "predict_mean_var",
-    "refresh_state", "sample_block", "sample_joint", "save_state",
-    "stack_states", "state_from_model", "update_state",
+    "engine", "frontend", "online", "posterior", "slo",
+    "Frontend", "FrontendError", "MultiPredictEngine", "PredictEngine",
+    "PredictiveState", "QuantileSketch", "QueueFull", "RefreshResult",
+    "SLOExceeded", "SLOMetrics", "ServeResult", "downdate_state",
+    "extract_state", "load_state", "mixture_moments", "predict_full_cov",
+    "predict_mean_var", "refresh_state", "sample_block", "sample_joint",
+    "save_state", "stack_states", "state_from_model", "update_state",
 ]

@@ -82,7 +82,9 @@ def _make_scan_blocks(block_fn, block_size: int):
             return carry, block_fn(st, x_blk)
 
         _, (mean, var) = lax.scan(body, None, xb)
-        return mean.reshape(t_local, -1), var.reshape(t_local)
+        # Explicit trailing dim: a -1 cannot be inferred from a size-0 array,
+        # and t_local == 0 (an empty flush) must stay a no-op, not an error.
+        return mean.reshape(t_local, mean.shape[-1]), var.reshape(t_local)
 
     return scan_blocks
 
@@ -187,6 +189,27 @@ class PredictEngine:
     def _noise_var(self):
         return jnp.exp(-self._cstate.hyp["log_beta"])
 
+    @property
+    def compute_state(self):
+        """The compute-width (upcast, device-placed) state the jitted
+        programs consume.  ``swap_state`` replaces it wholesale, so a caller
+        that reads it ONCE and passes it to :meth:`run_blocks` is fenced
+        against concurrent swaps — in-flight batches complete against the
+        state they were dispatched with (``serve.frontend`` relies on this).
+        """
+        return self._cstate
+
+    def run_blocks(self, xq: Array, cstate=None):
+        """Run the jitted block scan on an ALREADY padded/staged query
+        buffer — ``xq`` must be what :meth:`pad_queries` returned (a
+        multiple of ``n_shards * block_size`` rows in ``compute_dtype``),
+        so whoever assembled the batch pads exactly once.  ``cstate`` pins
+        the program to a specific :attr:`compute_state` snapshot (hot-swap
+        fencing); ``None`` serves the engine's current state.  Returns the
+        *padded* ``(mean, var)`` — callers slice off the pad rows.
+        """
+        return self._run(self._cstate if cstate is None else cstate, xq)
+
     # -- online updates (ingest-update-serve) -------------------------------
     def swap_state(self, state: posterior.PredictiveState) -> None:
         """Atomically replace the served state with a same-shape one —
@@ -245,6 +268,11 @@ class PredictEngine:
     def predict(self, xstar, include_noise: bool = False):
         """Batched diag-variance prediction: ``(mean (t, d), var (t,))``."""
         xq, t = self.pad_queries(xstar)
+        if t == 0:
+            # An empty batch (a serving front-end's deadline flush with zero
+            # live rows) is a no-op, never a shape error.
+            return (jnp.zeros((0, self.state.c2.shape[-1]), self.compute_dtype),
+                    jnp.zeros((0,), self.compute_dtype))
         mean, var = self._run(self._cstate, xq)
         mean, var = mean[:t], var[:t]
         if include_noise:
@@ -362,7 +390,7 @@ class PredictEngine:
 
             _, smp = lax.scan(body, None, (xb, keys))   # (nb, S, bs, d)
             smp = jnp.swapaxes(smp, 0, 1)               # (S, nb, bs, d)
-            return smp.reshape(num_samples, t_local, -1)
+            return smp.reshape(num_samples, t_local, smp.shape[-1])
 
         if self.mesh is None:
             run = scan_sample
@@ -529,12 +557,66 @@ class MultiPredictEngine:
                             out_specs=(out, out))
         self._run = jax.jit(run, donate_argnums=(1,) if donate else ())
 
-    # `pad_queries` is identical to the single-model engine's.
+    # `pad_queries` / `run_blocks` / `compute_state` are identical to the
+    # single-model engine's (the state argument is simply the stacked tree).
     pad_queries = PredictEngine.pad_queries
+    run_blocks = PredictEngine.run_blocks
+    compute_state = PredictEngine.compute_state
+
+    # -- hot swap -----------------------------------------------------------
+    def swap_state(self, states) -> None:
+        """Atomically replace the whole fleet with same-shape states (an
+        already-stacked state or a sequence of N) — zero recompilation,
+        mirroring :meth:`PredictEngine.swap_state`."""
+        stacked = (states if isinstance(states, posterior.PredictiveState)
+                   else stack_states(states))
+        if stacked.kernel != self.state.kernel:
+            raise ValueError(
+                "swap_state needs the same kernel expression "
+                f"({self.state.kernel} vs {stacked.kernel}) — build a new "
+                "engine for a different covariance")
+        for a, b in zip(jax.tree.leaves(self.state), jax.tree.leaves(stacked)):
+            if a.shape != b.shape:
+                raise ValueError(
+                    "swap_state needs identical leaf shapes (same N, m, q, d)"
+                    f" — got {a.shape} vs {b.shape}; build a new engine for "
+                    "a reshaped fleet")
+        self.state = stacked
+        cstate = (stacked if jnp.dtype(stacked.z.dtype) == self.compute_dtype
+                  else stacked.astype(self.compute_dtype))
+        if self.mesh is not None:
+            cstate = jax.device_put(
+                cstate, NamedSharding(self.mesh, self._rep_spec))
+        self._cstate = cstate
+
+    def swap_slot(self, index: int, state: posterior.PredictiveState) -> None:
+        """Replace ONE model of the fleet in place (an A/B rollout: ship a
+        new state into slot ``index`` while the other N-1 keep serving) —
+        same zero-recompile contract as :meth:`swap_state`."""
+        if not 0 <= index < self.n_models:
+            raise ValueError(
+                f"slot {index} out of range for a fleet of {self.n_models}")
+        if state.kernel != self.state.kernel:
+            raise ValueError(
+                "swap_slot needs the same kernel expression "
+                f"({self.state.kernel} vs {state.kernel})")
+        for a, b in zip(jax.tree.leaves(self.state), jax.tree.leaves(state)):
+            if a.shape[1:] != b.shape:
+                raise ValueError(
+                    "swap_slot needs a state matching the fleet's per-model "
+                    f"leaf shapes — got {b.shape} for a slot of {a.shape[1:]}")
+        stacked = jax.tree.map(
+            lambda big, one: big.at[index].set(jnp.asarray(one, big.dtype)),
+            self.state, state)
+        self.swap_state(stacked)
 
     def predict(self, xstar, include_noise: bool = False):
         """All models answer the batch: ``(mean (N, t, d), var (N, t))``."""
         xq, t = self.pad_queries(xstar)
+        if t == 0:
+            n, d = self.n_models, self.state.c2.shape[-1]
+            return (jnp.zeros((n, 0, d), self.compute_dtype),
+                    jnp.zeros((n, 0), self.compute_dtype))
         mean, var = self._run(self._cstate, xq)
         mean, var = mean[:, :t], var[:, :t]
         if include_noise:

@@ -1,0 +1,425 @@
+"""Async micro-batching serving front-end: requests in, engine blocks out.
+
+The engines (:mod:`serve.engine`) are libraries — they answer one padded
+batch per call.  A deployment faces the opposite shape: many concurrent
+requests of arbitrary size that must become the engine's fixed
+``block_size`` batches without any request waiting behind a full rescan.
+:class:`Frontend` is that layer:
+
+  * **Continuous micro-batching** — a single dispatch loop pulls requests
+    off a bounded queue and coalesces them until the batch is full
+    (``max_batch_rows``, rounded up to the engine's
+    ``n_shards * block_size`` padding multiple) or the oldest request has
+    waited ``max_wait_ms``, then flushes.  Requests are concatenated raw
+    and padded **once** by ``engine.pad_queries`` — nothing already padded
+    is ever re-padded, and predictions are row-local, so each response is
+    bitwise what a direct ``engine.predict`` call returns for that request
+    (property-tested in tests/test_frontend.py).
+  * **Admission control & deadlines** — a full queue rejects at submit
+    with :class:`QueueFull` (backpressure, the open-loop-honest failure
+    mode); a request whose deadline passes before dispatch fails fast with
+    :class:`SLOExceeded` and never occupies engine time.  A request that
+    was dispatched in time but finished late is still answered — flagged
+    ``late`` in the metrics, never dropped.
+  * **SLO accounting** — every request feeds the constant-memory
+    :class:`~repro.serve.slo.SLOMetrics` (wait / engine / e2e sketches);
+    per-flush engine wall times also feed a
+    :class:`~repro.distributed.fault.StepTimer`, so serving flushes report
+    the same min/mean/max load summary the training loop uses.
+  * **Zero-downtime hot swap** — :meth:`Frontend.swap_state` atomically
+    replaces the engine's state (or one slot of a
+    :class:`~repro.serve.engine.MultiPredictEngine` fleet) while requests
+    are in flight.  The fence is a ``(generation, compute_state, noise)``
+    tuple read once per flush: in-flight batches complete against the
+    state they were dispatched with, every response carries the generation
+    it was served under, and no request is ever dropped by a swap.
+
+The engine call runs in a worker thread (``run_in_executor``) so the event
+loop keeps accepting requests while XLA computes.  All request-path methods
+(``submit``/``start``/``stop``) belong to one event loop; ``swap_state``
+may be called from any thread (the fence tuple is replaced atomically).
+"""
+from __future__ import annotations
+
+import asyncio
+import pathlib
+import time
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+
+from ..distributed.fault import StepTimer
+from .engine import MultiPredictEngine, PredictEngine
+from .posterior import PredictiveState, load_state
+from .slo import SLOMetrics
+
+
+class FrontendError(RuntimeError):
+    """Base class for front-end request failures."""
+
+
+class QueueFull(FrontendError):
+    """Admission control: the bounded request queue cannot take this
+    request now — retry with backoff or shed load upstream."""
+
+
+class SLOExceeded(FrontendError):
+    """The request's deadline expired before it could be dispatched; it
+    was failed fast (no engine time spent) — never silently dropped."""
+
+
+class ServeResult(NamedTuple):
+    """One answered request.  ``mean``/``var`` are numpy, shaped exactly as
+    ``engine.predict`` returns for this request's rows ((t, d)/(t,) single
+    model; (N, t, d)/(N, t) fleet).  ``generation`` is the hot-swap fence
+    value the serving state carried when this batch was dispatched."""
+
+    mean: np.ndarray
+    var: np.ndarray
+    generation: int
+
+
+@dataclass
+class _Request:
+    x: np.ndarray
+    include_noise: bool
+    enqueue: float            # monotonic seconds
+    deadline: float | None    # monotonic seconds, absolute
+    future: asyncio.Future
+
+
+_CLOSE = object()   # queue sentinel: drain and stop
+
+
+class Frontend:
+    """Continuous micro-batching front-end over a predict engine.
+
+    Args:
+      engine: a :class:`PredictEngine` or :class:`MultiPredictEngine`.
+      max_batch_rows: flush as soon as a batch holds this many rows
+        (rounded up to the engine's ``n_shards * block_size`` padding
+        multiple, so a full flush is pad-free).  A hard cap: a request
+        that would push past it heads the next batch instead — only a
+        single request larger than the cap ever exceeds it (it flushes
+        alone, on a batch shape :meth:`warmup` did not pre-compile).
+        Default: one padding multiple.
+      max_wait_ms: flush no later than this after the *oldest* queued
+        request arrived — the latency/throughput knob (0 dispatches every
+        request immediately).
+      max_queue_rows: admission bound on rows accepted but not yet
+        dispatched; beyond it ``submit`` raises :class:`QueueFull`.
+      max_batch_requests: optional cap on requests per flush (1 = the
+        naive per-request baseline the benchmark compares against).
+      default_deadline_ms: deadline applied when ``submit`` passes none
+        (``None`` = no deadline).
+      metrics / timer: bring-your-own :class:`SLOMetrics` /
+        :class:`StepTimer` (e.g. shared across front-ends); fresh ones by
+        default.
+    """
+
+    def __init__(self, engine: PredictEngine | MultiPredictEngine, *,
+                 max_batch_rows: int | None = None, max_wait_ms: float = 2.0,
+                 max_queue_rows: int = 65536,
+                 max_batch_requests: int | None = None,
+                 default_deadline_ms: float | None = None,
+                 metrics: SLOMetrics | None = None,
+                 timer: StepTimer | None = None):
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        if max_queue_rows < 1:
+            raise ValueError(
+                f"max_queue_rows must be >= 1, got {max_queue_rows}")
+        if max_batch_requests is not None and max_batch_requests < 1:
+            raise ValueError(
+                f"max_batch_requests must be >= 1, got {max_batch_requests}")
+        self.engine = engine
+        self._multi = isinstance(engine, MultiPredictEngine)
+        self._row_mult = engine.block_size * engine.n_shards
+        if max_batch_rows is None:
+            max_batch_rows = self._row_mult
+        if max_batch_rows < 1:
+            raise ValueError(
+                f"max_batch_rows must be >= 1, got {max_batch_rows}")
+        # Round up to the padding multiple: a "full" batch never pads.
+        self.max_batch_rows = -(-max_batch_rows // self._row_mult) * self._row_mult
+        self.max_wait = max_wait_ms / 1e3
+        self.max_queue_rows = max_queue_rows
+        self.max_batch_requests = max_batch_requests
+        self.default_deadline = (None if default_deadline_ms is None
+                                 else default_deadline_ms / 1e3)
+        self.metrics = metrics if metrics is not None else SLOMetrics()
+        self.timer = timer if timer is not None else StepTimer()
+        self._np_dtype = np.dtype(engine.compute_dtype)
+        self._q = engine.state.z.shape[-1]
+        self._d = engine.state.c2.shape[-1]
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._queued_rows = 0
+        self._generation = 0
+        # The hot-swap fence: replaced as ONE tuple so a flush that reads it
+        # once can never pair an old generation with a new state (or the
+        # wrong generation's noise term).
+        self._current = (0, engine.compute_state,
+                         self._noise_of(engine.compute_state))
+        self._task: asyncio.Task | None = None
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "Frontend":
+        """Start the dispatch loop on the running event loop (idempotent)."""
+        if self._task is None:
+            self._closed = False
+            self._task = asyncio.get_running_loop().create_task(
+                self._dispatch_loop(), name="serve-frontend-dispatch")
+        return self
+
+    async def stop(self) -> None:
+        """Drain — every accepted request is flushed and answered — then
+        stop the dispatch loop.  ``start`` may be called again after."""
+        if self._task is None:
+            return
+        self._closed = True          # reject new submits while draining
+        self._queue.put_nowait(_CLOSE)
+        await self._task
+        self._task = None
+
+    async def __aenter__(self) -> "Frontend":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def warmup(self) -> int:
+        """Pre-compile every padded batch shape the dispatch loop can
+        produce (each multiple of the padding multiple up to
+        ``max_batch_rows``).  The jitted block scan specialises on the
+        padded row count, so without warmup the first flush at each new
+        size pays its XLA compile mid-traffic — enough to blow a
+        millisecond-scale SLO for everything queued behind it.  Blocking;
+        call before taking load.  Returns the number of shapes compiled."""
+        cstate = self._current[1]
+        n = 0
+        for rows in range(self._row_mult, self.max_batch_rows + 1,
+                          self._row_mult):
+            self._run_batch(cstate, np.zeros((rows, self._q), self._np_dtype))
+            n += 1
+        return n
+
+    # -- the request path ---------------------------------------------------
+    @property
+    def generation(self) -> int:
+        """The hot-swap fence: bumped by every :meth:`swap_state`."""
+        return self._generation
+
+    @property
+    def queued_rows(self) -> int:
+        """Rows accepted but not yet dispatched (the admission meter)."""
+        return self._queued_rows
+
+    def load_summary(self) -> dict:
+        """Per-flush engine-time min/mean/max + straggler overhead — the
+        same ``StepTimer`` summary the training loop reports."""
+        return self.timer.summary()
+
+    async def submit(self, x, *, include_noise: bool = False,
+                     deadline_ms: float | None = None) -> ServeResult:
+        """Enqueue one request of ``(t, q)`` queries (a 1-d ``(q,)`` array
+        is one row) and await its :class:`ServeResult`.
+
+        Raises :class:`QueueFull` immediately when admission fails and
+        :class:`SLOExceeded` when the deadline passes before dispatch.
+        """
+        if self._task is None or self._closed:
+            raise FrontendError(
+                "Frontend is not running — use `async with Frontend(...)` "
+                "or call start() first" if self._task is None
+                else "Frontend is draining — no new requests")
+        x = np.asarray(x, self._np_dtype)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self._q:
+            raise ValueError(
+                f"expected queries of shape (t, {self._q}), got {x.shape}")
+        t = x.shape[0]
+        if t == 0:
+            # An empty request is answered inline: nothing to batch.
+            gen = self._current[0]
+            if self._multi:
+                n = self.engine.n_models
+                return ServeResult(np.zeros((n, 0, self._d), self._np_dtype),
+                                   np.zeros((n, 0), self._np_dtype), gen)
+            return ServeResult(np.zeros((0, self._d), self._np_dtype),
+                               np.zeros((0,), self._np_dtype), gen)
+        if self._queued_rows + t > self.max_queue_rows:
+            self.metrics.observe_reject_queue_full()
+            raise QueueFull(
+                f"request of {t} rows rejected: {self._queued_rows} of "
+                f"{self.max_queue_rows} queue rows already in use")
+        now = time.monotonic()
+        dl = deadline_ms / 1e3 if deadline_ms is not None else self.default_deadline
+        req = _Request(x=x, include_noise=include_noise, enqueue=now,
+                       deadline=None if dl is None else now + dl,
+                       future=asyncio.get_running_loop().create_future())
+        self._queued_rows += t
+        self.metrics.observe_admit()
+        self._queue.put_nowait(req)
+        return await req.future
+
+    # -- hot swap -----------------------------------------------------------
+    def swap_state(self, state_or_path, slot: int | None = None) -> int:
+        """Atomically replace the served state while requests are in flight;
+        returns the new generation (the fence value responses will carry).
+
+        ``state_or_path`` is a :class:`PredictiveState` or a checkpoint path
+        (restored via the dtype-tagged sidecar, ``serve.load_state`` — a
+        rollout host needs no model code).  ``slot`` selects one model of a
+        :class:`MultiPredictEngine` fleet (``swap_slot``); ``None`` replaces
+        the whole state.  In-flight batches complete against the state they
+        were dispatched with — the dispatch loop reads the
+        ``(generation, state)`` fence once per flush — so no response ever
+        mixes generations and no request is dropped by a swap.
+        """
+        state = state_or_path
+        if isinstance(state, (str, pathlib.Path)):
+            state, _ = load_state(state)
+        if slot is None:
+            self.engine.swap_state(state)
+        else:
+            if not self._multi:
+                raise ValueError(
+                    "slot= is only meaningful for a MultiPredictEngine fleet")
+            self.engine.swap_slot(slot, state)
+        self._generation += 1
+        cstate = self.engine.compute_state
+        self._current = (self._generation, cstate, self._noise_of(cstate))
+        return self._generation
+
+    # -- the dispatch loop --------------------------------------------------
+    async def _dispatch_loop(self) -> None:
+        q = self._queue
+        draining = False
+        held: _Request | None = None     # dequeued but didn't fit last batch
+        while True:
+            if held is not None:
+                req, held = held, None
+            elif draining:
+                if q.empty():
+                    break
+                req = q.get_nowait()
+            else:
+                req = await q.get()
+            if req is _CLOSE:
+                draining = True
+                continue
+            batch = [req]
+            rows = req.x.shape[0]
+            flush_by = req.enqueue + self.max_wait
+            while rows < self.max_batch_rows and (
+                    self.max_batch_requests is None
+                    or len(batch) < self.max_batch_requests):
+                if not q.empty():
+                    # Greedy drain: whatever is already queued coalesces
+                    # into this batch at zero extra latency — under backlog
+                    # the batcher must not flush singletons just because
+                    # the oldest request's wait budget is spent.
+                    nxt = q.get_nowait()
+                elif draining:
+                    break
+                else:
+                    delay = flush_by - time.monotonic()
+                    if delay <= 0:
+                        break
+                    try:
+                        nxt = await asyncio.wait_for(q.get(), timeout=delay)
+                    except asyncio.TimeoutError:
+                        break
+                if nxt is _CLOSE:
+                    draining = True
+                    continue
+                if rows + nxt.x.shape[0] > self.max_batch_rows:
+                    # Would overshoot the batch bound (and land on a batch
+                    # shape warmup never compiled) — it heads the next batch
+                    # instead.  Only a request alone may exceed the bound.
+                    held = nxt
+                    break
+                batch.append(nxt)
+                rows += nxt.x.shape[0]
+            await self._flush(batch)
+
+    async def _flush(self, batch: list[_Request]) -> None:
+        now = time.monotonic()
+        live = []
+        for r in batch:
+            self._queued_rows -= r.x.shape[0]
+            if r.future.cancelled():
+                self.metrics.observe_cancelled()
+                continue
+            if r.deadline is not None and now > r.deadline:
+                self.metrics.observe_expired()
+                r.future.set_exception(SLOExceeded(
+                    f"deadline expired {1e3 * (now - r.deadline):.2f} ms "
+                    f"before dispatch (waited "
+                    f"{1e3 * (now - r.enqueue):.2f} ms in queue)"))
+                continue
+            live.append(r)
+        if not live:
+            return                       # a zero-row flush is a no-op
+        gen, cstate, noise = self._current   # the hot-swap fence, read ONCE
+        for r in live:
+            self.metrics.observe_wait(now - r.enqueue)
+        xcat = np.concatenate([r.x for r in live], axis=0)
+        rows = xcat.shape[0]
+        pad_rows = (-rows) % self._row_mult
+        t0 = time.perf_counter()
+        mean, var = await asyncio.get_running_loop().run_in_executor(
+            None, self._run_batch, cstate, xcat)
+        engine_s = time.perf_counter() - t0
+        self.timer.record([engine_s])
+        self.metrics.observe_flush(len(live), rows, pad_rows, engine_s)
+        done = time.monotonic()
+        lo = 0
+        for r in live:
+            hi = lo + r.x.shape[0]
+            m_i, v_i = mean[..., lo:hi, :], var[..., lo:hi]
+            lo = hi
+            if r.include_noise:
+                v_i = v_i + noise
+            if not r.future.cancelled():
+                r.future.set_result(ServeResult(m_i, v_i, gen))
+            late = r.deadline is not None and done > r.deadline
+            self.metrics.observe_complete(done - r.enqueue, late=late)
+
+    def _run_batch(self, cstate, xcat: np.ndarray):
+        """Worker-thread body: pad once, run the jitted block scan against
+        the fenced state snapshot, slice the pad off, pull to host.
+
+        The padding is plain numpy and the engine is entered through ONE
+        jitted call + one ``device_get`` — every un-jitted jax op in here
+        is a GIL release/re-acquire, and under load each re-acquire can
+        wait a full switch interval behind the busy event-loop thread, so
+        op count in this thread is latency, not style.  (Sharded engines
+        keep the ``pad_queries`` path: their pad must also place shards.)
+        """
+        import jax
+
+        t = xcat.shape[0]
+        if self.engine.mesh is not None:
+            xq, _ = self.engine.pad_queries(xcat)
+        else:
+            pad = (-t) % self._row_mult
+            if pad:
+                xq = np.zeros((t + pad, xcat.shape[1]), xcat.dtype)
+                xq[:t] = xcat
+            else:
+                xq = xcat
+        mean, var = jax.device_get(self.engine.run_blocks(xq, cstate))
+        return mean[..., :t, :], var[..., :t]
+
+    def _noise_of(self, cstate) -> np.ndarray:
+        """1/beta from a state snapshot — the same values the engine's
+        ``include_noise`` adds, so noisy responses stay bitwise too.
+        Computed once per generation (at fence build), never per flush."""
+        import jax.numpy as jnp
+
+        nv = np.asarray(jnp.exp(-cstate.hyp["log_beta"]))
+        return nv[..., None] if self._multi else nv

@@ -34,6 +34,20 @@ def test_checkpoint_rotation_and_latest(tmp_path, rng):
     assert ckpt.latest(tmp_path).name == "ckpt_step40"
 
 
+def test_restore_rejects_wrong_artifact(tmp_path, rng):
+    """Restoring into a template the checkpoint wasn't written for fails
+    loudly (leaf count, then missing key) — a hot state swap must never
+    silently unflatten a subset of the wrong artifact."""
+    t = _tree(rng)
+    ckpt.save(tmp_path / "ckpt_step10", t, {"step": 10})
+    extra = dict(t, stray=jnp.zeros(3))
+    with pytest.raises(ValueError, match="wrong artifact"):
+        ckpt.restore(tmp_path / "ckpt_step10", extra)
+    renamed = {("stray" if k == min(t) else k): v for k, v in t.items()}
+    with pytest.raises(KeyError, match="wrong or partial"):
+        ckpt.restore(tmp_path / "ckpt_step10", renamed)
+
+
 def test_async_checkpointer(tmp_path, rng):
     t = _tree(rng)
     saver = ckpt.AsyncCheckpointer()

@@ -1,0 +1,313 @@
+"""The async micro-batching front-end: coalescing, SLOs, hot swap.
+
+The core contract under test: predictions are row-local, so every response
+the front-end scatters out of a coalesced batch is BITWISE what a direct
+``engine.predict`` call returns for that request — regardless of batch
+composition, padding, or a hot swap racing the flush (each response then
+matches the state of the generation it carries).  Failure modes are typed
+(`QueueFull`, `SLOExceeded`), never silent.
+
+All tests drive the event loop through ``asyncio.run`` (no asyncio pytest
+plugin in the image) and keep deadlines coarse enough for a loaded CI box.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.stats import partial_stats
+from repro.serve import (Frontend, FrontendError, MultiPredictEngine,
+                         PredictEngine, QueueFull, SLOExceeded, extract_state,
+                         save_state, stack_states)
+
+
+def _hyp(rng, q, shift=0.0):
+    return {"log_sf2": jnp.asarray(rng.uniform(-0.5, 0.8) + shift),
+            "log_ell": jnp.asarray(rng.uniform(-0.4, 0.4, q)),
+            "log_beta": jnp.asarray(1.2)}
+
+
+def _state(rng, n=80, m=11, q=2, d=3, shift=0.0):
+    hyp = _hyp(rng, q, shift)
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    stats = partial_stats(hyp, z, y, x, s=None, latent=False)
+    return extract_state(hyp, z, stats)
+
+
+def _engine(rng, block=8, **kw):
+    return PredictEngine(_state(rng, **kw), block_size=block)
+
+
+def test_frontend_bitwise_parity_concurrent(rng):
+    """Mixed-size concurrent requests coalesce, and every response is
+    bitwise the direct engine answer for its rows (noise included)."""
+    eng = _engine(rng)
+    xs = [rng.standard_normal((t, 2)) for t in (1, 3, 8, 5, 2, 13, 7)]
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=30.0, max_batch_rows=64) as fe:
+            fe.warmup()
+            return await asyncio.gather(*[
+                fe.submit(x, include_noise=(i % 2 == 0))
+                for i, x in enumerate(xs)])
+
+    results = asyncio.run(main())
+    for i, (x, res) in enumerate(zip(xs, results)):
+        m_ref, v_ref = eng.predict(x, include_noise=(i % 2 == 0))
+        assert res.generation == 0
+        assert res.mean.shape == (x.shape[0], 3)
+        np.testing.assert_array_equal(res.mean, np.asarray(m_ref))
+        np.testing.assert_array_equal(res.var, np.asarray(v_ref))
+
+
+def test_frontend_coalesces_and_accounts(rng):
+    """Concurrent submits land in far fewer flushes than requests, and the
+    row/pad accounting in the metrics adds up exactly."""
+    eng = _engine(rng)
+    xs = [rng.standard_normal((3, 2)) for _ in range(12)]
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=50.0, max_batch_rows=64) as fe:
+            fe.warmup()
+            await asyncio.gather(*[fe.submit(x) for x in xs])
+            return fe.metrics.summary()
+
+    summ = asyncio.run(main())
+    c = summ["counters"]
+    assert c["flushes"] < len(xs)                      # actually coalesced
+    assert summ["mean_batch_requests"] > 1.0
+    assert c["flushed_requests"] == len(xs)
+    assert c["flushed_rows"] == 3 * len(xs)
+    assert (c["flushed_rows"] + c["padded_rows"]) % 8 == 0   # staged in blocks
+    assert c["completed"] == len(xs) and c["expired"] == 0
+
+
+def test_frontend_deadline_expires_as_slo_exceeded(rng):
+    """A deadline shorter than the batching wait fails fast and typed —
+    never a silent drop — and is counted as expired."""
+    eng = _engine(rng)
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=120.0, max_batch_rows=800) as fe:
+            fe.warmup()
+            with pytest.raises(SLOExceeded, match="deadline expired"):
+                await fe.submit(rng.standard_normal((4, 2)), deadline_ms=1.0)
+            return fe.metrics.summary()["counters"]
+
+    c = asyncio.run(main())
+    assert c["expired"] == 1 and c["completed"] == 0
+
+
+def test_frontend_queue_full_backpressure(rng):
+    """Admission control: rows beyond max_queue_rows are rejected with
+    QueueFull at submit time and never enqueued."""
+    eng = _engine(rng)
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=200.0, max_batch_rows=800,
+                            max_queue_rows=16) as fe:
+            fe.warmup()
+            t1 = asyncio.ensure_future(fe.submit(rng.standard_normal((8, 2))))
+            t2 = asyncio.ensure_future(fe.submit(rng.standard_normal((8, 2))))
+            await asyncio.sleep(0)                   # let them enqueue
+            assert fe.queued_rows == 16
+            with pytest.raises(QueueFull, match="16 of 16"):
+                await fe.submit(rng.standard_normal((1, 2)))
+            counters = fe.metrics.summary()["counters"]
+            r1, r2 = await asyncio.gather(t1, t2)    # drained on stop
+            return counters, r1, r2
+
+    counters, r1, r2 = asyncio.run(main())
+    assert counters["rejected_queue_full"] == 1
+    assert r1.mean.shape == (8, 3) and r2.mean.shape == (8, 3)
+
+
+def test_frontend_empty_request_inline(rng):
+    """A zero-row request is answered inline with empty, correctly shaped
+    arrays (it never occupies queue or engine time)."""
+    eng = _engine(rng)
+
+    async def main():
+        async with Frontend(eng) as fe:
+            res = await fe.submit(np.zeros((0, 2)))
+            return res, fe.metrics.summary()["counters"]
+
+    res, c = asyncio.run(main())
+    assert res.mean.shape == (0, 3) and res.var.shape == (0,)
+    assert res.generation == 0
+    assert c["flushes"] == 0 and c["submitted"] == 0
+
+
+def test_frontend_hot_swap_mid_load_bitwise(rng):
+    """swap_state mid-load: zero dropped responses, and every response is
+    bitwise correct against the state of the generation it carries."""
+    state_a = _state(rng)
+    state_b = _state(rng, shift=0.3)
+    eng = PredictEngine(state_a, block_size=8)
+    states = {0: state_a}
+    xs = [rng.standard_normal((3, 2)) for _ in range(40)]
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=1.0, max_batch_rows=16) as fe:
+            fe.warmup()
+
+            async def load():
+                out = []
+                for x in xs:
+                    out.append(await fe.submit(x))
+                return out
+
+            async def swapper():
+                flip = [state_b, state_a]
+                for k in range(4):
+                    await asyncio.sleep(0.01)
+                    gen = fe.swap_state(flip[k % 2])
+                    states[gen] = flip[k % 2]
+
+            results, _ = await asyncio.gather(load(), swapper())
+            return results
+
+    results = asyncio.run(main())
+    assert len(results) == len(xs)                   # zero dropped
+    seen_gens = {r.generation for r in results}
+    ref = {g: PredictEngine(s, block_size=8) for g, s in states.items()}
+    for x, res in zip(xs, results):
+        m_ref, v_ref = ref[res.generation].predict(x)
+        np.testing.assert_array_equal(res.mean, np.asarray(m_ref))
+        np.testing.assert_array_equal(res.var, np.asarray(v_ref))
+    assert len(seen_gens) > 1                        # the swap actually hit
+
+
+def test_frontend_swap_from_checkpoint_path(rng, tmp_path):
+    """swap_state accepts a checkpoint path: the dtype-tagged sidecar
+    restores the state with no model code on the serving host."""
+    state_a = _state(rng)
+    state_b = _state(rng, shift=0.5)
+    path = save_state(tmp_path / "swap_in", state_b)
+    eng = PredictEngine(state_a, block_size=8)
+    x = rng.standard_normal((5, 2))
+
+    async def main():
+        async with Frontend(eng) as fe:
+            before = await fe.submit(x)
+            gen = fe.swap_state(path)
+            after = await fe.submit(x)
+            return before, gen, after
+
+    before, gen, after = asyncio.run(main())
+    assert (before.generation, after.generation) == (0, 1) and gen == 1
+    np.testing.assert_array_equal(
+        before.mean, np.asarray(PredictEngine(state_a, 8).predict(x)[0]))
+    np.testing.assert_array_equal(
+        after.mean, np.asarray(PredictEngine(state_b, 8).predict(x)[0]))
+    assert not np.array_equal(before.mean, after.mean)
+
+
+def test_frontend_stop_drains_and_restarts(rng):
+    """stop() answers everything already accepted, rejects new submits
+    while draining, and start() brings the loop back."""
+    eng = _engine(rng)
+
+    async def main():
+        fe = Frontend(eng, max_wait_ms=500.0, max_batch_rows=800).start()
+        fe.warmup()
+        tasks = [asyncio.ensure_future(fe.submit(rng.standard_normal((2, 2))))
+                 for _ in range(5)]
+        await asyncio.sleep(0)
+        await fe.stop()                              # flushes the 5 waiting
+        results = await asyncio.gather(*tasks)
+        with pytest.raises(FrontendError, match="not running"):
+            await fe.submit(rng.standard_normal((2, 2)))
+        fe.start()
+        again = await fe.submit(rng.standard_normal((2, 2)))
+        await fe.stop()
+        return results, again
+
+    results, again = asyncio.run(main())
+    assert all(r.mean.shape == (2, 3) for r in results)
+    assert again.mean.shape == (2, 3)
+
+
+def test_frontend_steptimer_wiring(rng):
+    """Per-flush engine wall times feed the StepTimer: one record per
+    flush, and load_summary() is the training loop's min/mean/max shape."""
+    eng = _engine(rng)
+
+    async def main():
+        async with Frontend(eng, max_wait_ms=20.0) as fe:
+            fe.warmup()
+            for _ in range(3):
+                await fe.submit(rng.standard_normal((4, 2)))
+            return fe.metrics.summary()["counters"], fe.load_summary()
+
+    counters, load = asyncio.run(main())
+    assert set(load) >= {"min", "mean", "max", "straggler_overhead"}
+    assert 0.0 < load["min"] <= load["mean"] <= load["max"]
+    assert counters["flushes"] == 3                  # sequential → one each
+
+
+def test_frontend_multi_engine_and_slot_swap(rng):
+    """A MultiPredictEngine front-end serves (N, t, d) responses bitwise,
+    and swap_state(state, slot=k) replaces one model mid-fleet."""
+    fleet = [_state(rng, shift=0.1 * k) for k in range(3)]
+    newcomer = _state(rng, shift=0.9)
+    eng = MultiPredictEngine(stack_states(fleet), block_size=8)
+    x = rng.standard_normal((6, 2))
+
+    async def main():
+        async with Frontend(eng) as fe:
+            before = await fe.submit(x)
+            gen = fe.swap_state(newcomer, slot=1)
+            after = await fe.submit(x)
+            return before, gen, after
+
+    before, gen, after = asyncio.run(main())
+    assert before.mean.shape == (3, 6, 3) and before.var.shape == (3, 6)
+    ref0 = MultiPredictEngine(stack_states(fleet), block_size=8).predict(x)
+    np.testing.assert_array_equal(before.mean, np.asarray(ref0[0]))
+    swapped = [fleet[0], newcomer, fleet[2]]
+    ref1 = MultiPredictEngine(stack_states(swapped), block_size=8).predict(x)
+    np.testing.assert_array_equal(after.mean, np.asarray(ref1[0]))
+    assert gen == 1 and after.generation == 1
+    # slots 0 and 2 are untouched by the slot swap
+    np.testing.assert_array_equal(before.mean[0], after.mean[0])
+    assert not np.array_equal(before.mean[1], after.mean[1])
+
+
+def test_frontend_validation(rng):
+    eng = _engine(rng)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        Frontend(eng, max_wait_ms=-1.0)
+    with pytest.raises(ValueError, match="max_queue_rows"):
+        Frontend(eng, max_queue_rows=0)
+    with pytest.raises(ValueError, match="max_batch_requests"):
+        Frontend(eng, max_batch_requests=0)
+    with pytest.raises(ValueError, match="max_batch_rows"):
+        Frontend(eng, max_batch_rows=0)
+    # max_batch_rows rounds UP to the engine's padding multiple
+    assert Frontend(eng, max_batch_rows=9).max_batch_rows == 16
+
+    async def main():
+        fe = Frontend(eng)
+        with pytest.raises(FrontendError, match="not running"):
+            await fe.submit(rng.standard_normal((2, 2)))
+        fe.start()
+        with pytest.raises(ValueError, match=r"\(t, 2\)"):
+            await fe.submit(rng.standard_normal((2, 5)))
+        with pytest.raises(ValueError, match="slot"):
+            fe.swap_state(_state(rng), slot=0)       # single-model engine
+        await fe.stop()
+
+    asyncio.run(main())
+
+
+def test_frontend_warmup_covers_all_shapes(rng):
+    """warmup() compiles one program per padded batch size the dispatch
+    loop can produce (max_batch_rows / padding-multiple shapes)."""
+    eng = _engine(rng)
+    fe = Frontend(eng, max_batch_rows=32)            # block 8 → 4 shapes
+    assert fe.warmup() == 4

@@ -125,6 +125,21 @@ def test_engine_rejects_bad_args(rng):
         PredictEngine(state, block_size=0)
 
 
+def test_engine_empty_batch_is_noop(rng):
+    """t=0 queries return empty, correctly typed arrays — a no-op, not a
+    reshape error (regression: the block scan reshaped with -1, which
+    cannot be inferred from a size-0 array)."""
+    hyp, z, stats = _posterior(rng)
+    state = extract_state(hyp, z, stats)
+    eng = PredictEngine(state, block_size=8)
+    xs = jnp.zeros((0, 2))
+    for noise in (False, True):
+        mean, var = eng.predict(xs, include_noise=noise)
+        assert mean.shape == (0, 3) and var.shape == (0,)
+        assert mean.dtype == eng.compute_dtype
+        assert var.dtype == eng.compute_dtype
+
+
 # -- fused Pallas predict kernel (interpret mode off-TPU) -------------------
 
 @pytest.mark.parametrize("t,m,q,d", [

@@ -7,11 +7,14 @@ single-model engine would produce — the vmap is pure batching, not an
 approximation — and the mixture helper implements the equal-weight moment
 algebra exactly.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
+from repro.core import covariance as cov
 from repro.core.stats import partial_stats
 from repro.serve import (MultiPredictEngine, PredictEngine, extract_state,
                          mixture_moments, stack_states)
@@ -122,3 +125,73 @@ def test_multi_engine_rejects_bad_inputs(rng):
         MultiPredictEngine(states[0])          # unstacked single state
     with pytest.raises(ValueError, match="block_size"):
         MultiPredictEngine(states, block_size=0)
+
+
+def test_stack_states_rejects_mismatched_trees(rng):
+    """A mixed fleet fails loudly before the treedef error inside tree.map:
+    dtype mismatch and kernel-spec mismatch each get a typed message."""
+    states = _fleet(rng)
+    quantized = states[1].astype(jnp.bfloat16)
+    with pytest.raises(ValueError, match="shapes/dtypes"):
+        stack_states([states[0], quantized])
+    rekernel = dataclasses.replace(states[1], kernel=cov.Matern32())
+    with pytest.raises(ValueError, match="kernel expression"):
+        stack_states([states[0], rekernel])
+
+
+def test_mixture_moments_clamps_negative_variance(rng):
+    """Quantized states can round a within-model variance slightly
+    negative; the mixture clamps it at 0 so the result stays a variance."""
+    mean = jnp.asarray(rng.standard_normal((3, 5, 2)))
+    var = jnp.asarray(rng.uniform(0.1, 1.0, (3, 5)))
+    var = var.at[1, 2].set(-1e-4).at[2, 0].set(-0.5)
+    mu, v = mixture_moments(mean, var)
+    assert bool(jnp.isfinite(v).all()) and bool((v >= 0).all())
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mean).mean(0),
+                               rtol=1e-12)
+    clamped = (np.maximum(np.asarray(var), 0.0).mean(0)[:, None]
+               + np.asarray(mean).var(axis=0))
+    np.testing.assert_allclose(np.asarray(v), clamped, rtol=1e-12)
+    # the clamp floors the within-model term: v >= spread-of-means alone
+    assert (np.asarray(v) >= np.asarray(mean).var(axis=0) - 1e-12).all()
+
+
+def test_multi_engine_swap_state_and_slot(rng):
+    """Fleet hot swap: swap_state replaces the whole fleet, swap_slot one
+    model; outputs match freshly built engines, shapes are validated."""
+    fleet_a = _fleet(rng)
+    fleet_b = _fleet(rng)                        # same shapes, new posteriors
+    eng = MultiPredictEngine(fleet_a, block_size=8)
+    xs = jnp.asarray(rng.standard_normal((6, 2)))
+    before = eng.predict(xs)
+
+    eng.swap_state(fleet_b)                      # sequence form
+    ref_b = MultiPredictEngine(fleet_b, block_size=8).predict(xs)
+    np.testing.assert_array_equal(np.asarray(eng.predict(xs)[0]),
+                                  np.asarray(ref_b[0]))
+
+    eng.swap_state(stack_states(fleet_a))        # stacked form, back to A
+    np.testing.assert_array_equal(np.asarray(eng.predict(xs)[0]),
+                                  np.asarray(before[0]))
+
+    eng.swap_slot(2, fleet_b[0])                 # one-model rollout
+    mixed = [fleet_a[0], fleet_a[1], fleet_b[0]]
+    ref_m = MultiPredictEngine(mixed, block_size=8).predict(xs)
+    np.testing.assert_array_equal(np.asarray(eng.predict(xs)[0]),
+                                  np.asarray(ref_m[0]))
+
+    with pytest.raises(ValueError, match="out of range"):
+        eng.swap_slot(3, fleet_b[0])
+    wrong_m = _fleet(rng, n_models=1, m=7)[0]
+    with pytest.raises(ValueError, match="per-model leaf shapes"):
+        eng.swap_slot(0, wrong_m)
+    with pytest.raises(ValueError, match="identical leaf shapes"):
+        eng.swap_state(_fleet(rng, n_models=2))  # N=2 into an N=3 engine
+
+
+def test_multi_engine_empty_batch_is_noop(rng):
+    """t=0 through the fleet: (N, 0, d)/(N, 0), not a reshape error."""
+    eng = MultiPredictEngine(_fleet(rng), block_size=8)
+    mean, var = eng.predict(jnp.zeros((0, 2)))
+    assert mean.shape == (3, 0, 2) and var.shape == (3, 0)
+    assert mean.dtype == eng.compute_dtype

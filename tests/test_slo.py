@@ -1,0 +1,149 @@
+"""Constant-memory SLO accounting: the quantile sketch and the metrics.
+
+The sketch's contract is bounded *relative* error: any in-range quantile
+it reports is within ~rel_err of the exact empirical quantile, from a
+fixed-size count vector.  The metrics' contract is conservation: every
+admitted request ends in exactly one terminal counter, and the derived
+summary numbers are pure functions of the counters/sketches.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import QuantileSketch, SLOMetrics
+
+
+def test_sketch_quantiles_within_relative_error(rng):
+    """p50/p90/p99 of a lognormal stream vs np.percentile: relative error
+    bounded by the bucket width (~2*rel_err, plus nearest-rank slack)."""
+    vals = rng.lognormal(mean=-4.0, sigma=1.0, size=20_000)   # ~ms scale
+    sk = QuantileSketch(low=1e-6, high=600.0, rel_err=0.01)
+    for v in vals:
+        sk.add(v)
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.percentile(vals, 100 * q))
+        got = sk.quantile(q)
+        assert abs(got - exact) / exact < 0.03, (q, got, exact)
+
+
+def test_sketch_exact_moments_and_edges(rng):
+    vals = rng.uniform(1e-4, 1.0, size=500)
+    sk = QuantileSketch()
+    for v in vals:
+        sk.add(v)
+    assert sk.count == 500
+    np.testing.assert_allclose(sk.mean, vals.mean(), rtol=1e-12)
+    assert sk.min == vals.min() and sk.max == vals.max()
+    # q=0 / q=1 return the exact observed extremes, not bucket midpoints
+    assert sk.quantile(0.0) == vals.min()
+    assert sk.quantile(1.0) <= vals.max()
+    assert sk.quantile(1.0) >= vals.max() * (1 - 2 * sk.rel_err)
+
+
+def test_sketch_empty_and_invalid():
+    sk = QuantileSketch()
+    assert sk.count == 0
+    assert math.isnan(sk.quantile(0.5)) and math.isnan(sk.mean)
+    assert math.isnan(sk.min) and math.isnan(sk.max)
+    with pytest.raises(ValueError, match="finite"):
+        sk.add(-1.0)
+    with pytest.raises(ValueError, match="finite"):
+        sk.add(math.nan)
+    with pytest.raises(ValueError, match="quantile"):
+        sk.quantile(1.5)
+    with pytest.raises(ValueError, match="low < high"):
+        QuantileSketch(low=1.0, high=0.5)
+    with pytest.raises(ValueError, match="rel_err"):
+        QuantileSketch(rel_err=1.5)
+
+
+def test_sketch_under_and_overflow_buckets():
+    """Values outside [low, high) land in edge buckets reported as the
+    exact running min/max — never a fabricated in-range number."""
+    sk = QuantileSketch(low=1e-3, high=1.0)
+    for v in (0.0, 1e-9, 5.0, 7.0):
+        sk.add(v)
+    assert sk.quantile(0.25) == 0.0          # underflow → exact min
+    assert sk.quantile(1.0) == 7.0           # overflow → exact max
+    assert sk.count == 4
+
+
+def test_sketch_merge_equals_combined(rng):
+    a_vals = rng.lognormal(-3.0, 0.7, size=3_000)
+    b_vals = rng.lognormal(-2.0, 0.7, size=5_000)
+    a, b, both = QuantileSketch(), QuantileSketch(), QuantileSketch()
+    for v in a_vals:
+        a.add(v)
+        both.add(v)
+    for v in b_vals:
+        b.add(v)
+        both.add(v)
+    assert a.merge(b) is a
+    assert a.count == both.count and a.max == both.max
+    np.testing.assert_allclose(a.mean, both.mean, rtol=1e-12)
+    for q in (0.5, 0.99):
+        assert a.quantile(q) == both.quantile(q)     # identical counts
+    with pytest.raises(ValueError, match="identical"):
+        a.merge(QuantileSketch(rel_err=0.05))
+
+
+def test_metrics_counter_conservation():
+    """submitted == completed + expired + cancelled once all requests are
+    terminal; rejected requests never enter the submitted population."""
+    m = SLOMetrics()
+    for _ in range(6):
+        m.observe_admit()
+    m.observe_reject_queue_full()
+    m.observe_wait(0.002)
+    m.observe_flush(n_requests=3, rows=24, pad_rows=8, engine_seconds=0.001)
+    for late in (False, False, True):
+        m.observe_complete(0.004, late=late)
+    m.observe_expired()
+    m.observe_expired()
+    m.observe_cancelled()
+    c = m.summary()["counters"]
+    assert c["submitted"] == 6
+    assert c["completed"] + c["expired"] + c["cancelled"] == 6
+    assert c["late"] == 1 and c["rejected_queue_full"] == 1
+    assert c["flushes"] == 1 and c["flushed_rows"] == 24
+
+
+def test_metrics_summary_derived_numbers():
+    m = SLOMetrics()
+    for _ in range(4):
+        m.observe_admit()
+    m.observe_flush(n_requests=4, rows=30, pad_rows=2, engine_seconds=0.003)
+    for _ in range(4):
+        m.observe_complete(0.01, late=False)
+    s = m.snapshot().summary()
+    assert s["mean_batch_requests"] == 4.0
+    np.testing.assert_allclose(s["pad_fraction"], 2 / 32)
+    np.testing.assert_allclose(
+        s["goodput_rps"] * s["elapsed_s"], 4.0, rtol=1e-9)
+    assert s["throughput_rps"] == s["goodput_rps"]   # nothing late
+    assert s["engine"]["count"] == 1 and s["e2e"]["count"] == 4
+
+
+def test_metrics_snapshot_is_frozen_and_independent():
+    m = SLOMetrics()
+    m.observe_admit()
+    m.observe_complete(0.5)
+    snap = m.snapshot()
+    el = snap.elapsed
+    m.observe_admit()
+    m.observe_complete(0.7)
+    assert snap.elapsed == el                        # frozen clock
+    assert snap.counters["completed"] == 1           # deep copy
+    assert m.counters["completed"] == 2
+    assert snap.e2e.count == 1 and m.e2e.count == 2
+
+
+def test_metrics_merge_across_frontends():
+    a, b = SLOMetrics(), SLOMetrics()
+    for m, n in ((a, 3), (b, 5)):
+        for _ in range(n):
+            m.observe_admit()
+            m.observe_complete(0.01)
+    a.merge(b)
+    assert a.counters["submitted"] == 8 and a.e2e.count == 8
