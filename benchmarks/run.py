@@ -6,10 +6,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus human summaries).
 import argparse
 import sys
 
-from . import figures, kernelzoo, online, serving, streaming
+from . import async_exec, figures, kernelzoo, online, serving, streaming
 
 
 ALL = {
+    "async": async_exec.async_exec,
     "fig2": figures.fig2_scaling_cores,
     "fig3": figures.fig3_scaling_data,
     "fig4": figures.fig4_parity,
@@ -29,6 +30,9 @@ ALL = {
 }
 
 FAST_ARGS = {
+    "async": dict(n=16_384, m=16, chunk=512, iters=2, refresh_sweep=(1, 4),
+                  staleness=16, straggler_rates=(0.0, 0.4),
+                  straggler_factor=6.0, straggler_iters=4, n_strag=4_096),
     "fig2": dict(n=4000, iters=2),
     "fig3": dict(iters=2),
     "fig4": dict(n=200, iters=40),

@@ -165,6 +165,7 @@ class DistributedGP:
         kernel_backend: str = "xla",
         batch_blocks: int | None = None,
         kernel=None,
+        reduce_mode: str = "serial",
     ):
         """``kernel``: the covariance expression (``core.covariance``;
         None = SE-ARD).  Threaded through the shard-local map and the
@@ -195,7 +196,34 @@ class DistributedGP:
         (one O(m²+md) psum).  The programs returned by :meth:`bound_fn` and
         :meth:`make_value_and_grad` then take one extra trailing argument: a
         ``jax.random.PRNGKey`` (uint32 (2,)), fresh per step.  Default None
-        = exact bound (every block scanned every step)."""
+        = exact bound (every block scanned every step).
+
+        ``reduce_mode``: how the bound/grad programs reduce the map's
+        Stats across shards (requires ``chunk_size`` for the non-serial
+        modes).
+
+          * ``"serial"`` (default) — the paper-shaped structure: the whole
+            shard-local scan finishes, then ONE constant-size psum.  The
+            collective serialises after the map.
+          * ``"overlap"`` — the overlapped reduce: each scanned block's
+            constant-size Stats contribution is psummed *inside* the scan
+            behind a double buffer, so block t's collective has no data
+            dependence on block t+1's compute and rides behind it (the
+            carry accumulates already-reduced Stats).  Bounds and grads
+            match ``"serial"`` to float-reassociation (f64) tolerance —
+            the cross-shard/cross-block sums associate per block instead
+            of per pass, so bitwise equality to the serial path is a
+            mathematical impossibility, not an implementation gap.
+          * ``"overlap_eager"`` — validation mode: the same per-block
+            reduce without the double buffer (block t reduced in step t).
+            Bitwise-identical Stats/bound/grads to ``"overlap"`` (the
+            fold order over blocks is the same — asserted in
+            tests/_dist_worker.py), useful to isolate scheduling effects.
+
+        The exact-stats programs (:meth:`reduced_stats`,
+        :meth:`update_stats_fn`, the streamed ingestion family) always
+        use the serial reduce: their bitwise streamed==staged contracts
+        are defined against the single-psum association."""
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if batch_blocks is not None:
@@ -209,6 +237,14 @@ class DistributedGP:
         if kernel_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel_backend must be 'xla' or 'pallas', got {kernel_backend!r}")
+        if reduce_mode not in ("serial", "overlap", "overlap_eager"):
+            raise ValueError(
+                "reduce_mode must be 'serial', 'overlap' or 'overlap_eager'"
+                f", got {reduce_mode!r}")
+        if reduce_mode != "serial" and chunk_size is None:
+            raise ValueError(
+                "reduce_mode='overlap' requires chunk_size: the per-block "
+                "collective needs scan blocks to hide behind")
         from .covariance import as_kernel
         self.kernel = as_kernel(kernel)
         if kernel_backend == "pallas":
@@ -226,6 +262,7 @@ class DistributedGP:
         self.kernel_backend = kernel_backend
         self.chunk_size = chunk_size
         self.batch_blocks = batch_blocks
+        self.reduce_mode = reduce_mode
         self.n_shards = num_shards(mesh, self.data_axes)
         self._data_spec = P(self.data_axes)
         self._rep_spec = P()
@@ -295,17 +332,25 @@ class DistributedGP:
                            blocks_per_chunk=blocks_per_chunk)
 
     # -- the SPMD program ---------------------------------------------------
-    def _local_stats(self, hyp, z, y, mu, s, w, key=None, exact=False) -> Stats:
+    def _psum_stats(self, st: Stats) -> Stats:
+        """Per-leaf constant-size cross-shard sum (the paper's reduce)."""
+        return Stats(*(lax.psum(t, self.data_axes) for t in st))
+
+    def _local_stats(self, hyp, z, y, mu, s, w, key=None, exact=False,
+                     block_reduce_fn=None, reduce_buffered=True) -> Stats:
         """Shard-local map: monolithic (chunk_size=None), streamed, or —
         with ``batch_blocks`` set and a per-shard ``key`` — SVI-sampled.
         ``exact=True`` forces the full scan regardless of ``batch_blocks``
-        (the posterior/prediction path)."""
+        (the posterior/prediction path).  ``block_reduce_fn`` switches to
+        the overlapped per-block reduce — the returned Stats are then
+        already globally reduced."""
         return partial_stats_chunked(
             hyp, z, y, mu, s,
             weights=w, latent=self.latent, psi2_fn=self.psi2_fn,
             reg_stats_fn=self.reg_stats_fn, block_size=self.chunk_size,
             batch_blocks=None if exact else self.batch_blocks, key=key,
             kernel=self.kernel, force_scan=True,
+            block_reduce_fn=block_reduce_fn, reduce_buffered=reduce_buffered,
         )
 
     def _shard_bound(self, hyp, z, y, mu, s, w, fmask, n_full, d, key=None):
@@ -320,9 +365,20 @@ class DistributedGP:
             # subsets.  Independence keeps the summed estimator unbiased:
             # E[psum of per-shard reweighted Stats] = psum of exact Stats.
             key = jax.random.fold_in(key, idx)
-        st = self._local_stats(hyp, z, y, mu, s, w, key=key)
-        # --- the reduce: constant-size collective, independent of n --------
-        st = Stats(*(lax.psum(t, self.data_axes) for t in st))
+        if self.reduce_mode == "serial":
+            st = self._local_stats(hyp, z, y, mu, s, w, key=key)
+            # --- the reduce: one constant-size collective after the map ----
+            st = self._psum_stats(st)
+        else:
+            # Overlapped reduce: each block's Stats contribution is psummed
+            # inside the map scan (double-buffered in "overlap" so block
+            # t's collective rides behind block t+1's compute); the scan
+            # returns already-reduced Stats and no post-map collective
+            # remains on the critical path.
+            st = self._local_stats(
+                hyp, z, y, mu, s, w, key=key,
+                block_reduce_fn=self._psum_stats,
+                reduce_buffered=(self.reduce_mode == "overlap"))
 
         if self.failure_mode == "rescale":
             if key is None:

@@ -162,6 +162,8 @@ def partial_stats_chunked(
     kernel: "cov.Kernel | None" = None,
     init: Stats | None = None,
     force_scan: bool = False,
+    block_reduce_fn=None,
+    reduce_buffered: bool = True,
 ) -> Stats:
     """Streaming map step: ``partial_stats`` folded over fixed-size row blocks.
 
@@ -214,6 +216,34 @@ def partial_stats_chunked(
         stats come from an in-device map or a streamed carry, which the
         streamed/in-memory bitwise-bound contract relies on.  No-op when
         ``block_size`` is None.
+      block_reduce_fn: the *overlapped reduce* hook (``Stats -> Stats``,
+        e.g. a per-leaf ``lax.psum`` bound to the mesh data axes).  When
+        set, the scan no longer accumulates shard-local statistics for a
+        single post-scan collective: each block's constant-size Stats
+        contribution is reduced across shards *inside* the scan and the
+        carry accumulates already-reduced values, so the collective for
+        block t rides behind block t+1's compute instead of serialising
+        after the whole map.  The returned Stats are then already
+        globally reduced — callers must NOT psum them again.  Requires
+        ``block_size`` (there is nothing to overlap without blocks) and
+        is incompatible with ``init`` (a prior-chunk carry is shard-local
+        by construction).  Composes with ``batch_blocks``: the sampled
+        blocks are reduced as they are scanned and the uniform
+        ``nb / batch_blocks`` reweighting is applied to the reduced
+        accumulator (every shard's padded geometry gives the same scale,
+        so scaling before or after the cross-shard sum commutes exactly
+        in real arithmetic and the estimator stays unbiased).
+      reduce_buffered: scheduling of the overlapped reduce (only
+        meaningful with ``block_reduce_fn``).  True (default) double-
+        buffers: the carry holds block t's raw Stats as a ``pending``
+        slot and folds ``block_reduce_fn(pending)`` — block t-1's
+        reduction — at step t, leaving the collective with no data
+        dependence on step t's block compute (XLA's scheduler can
+        overlap them); one flush reduces the final pending block after
+        the scan.  False reduces each block eagerly in its own step.
+        Both orders fold the same reduced values left-to-right, so they
+        are BITWISE equal — double-buffering is a pure scheduling
+        transformation (asserted in tests/_dist_worker.py).
 
     Exact mode is mathematically identical to :func:`partial_stats` (every
     statistic is a plain sum over points), but ``lax.scan``s over
@@ -242,6 +272,17 @@ def partial_stats_chunked(
             raise ValueError(
                 "init cannot be combined with batch_blocks: the SVI "
                 "reweighting scales the whole carry, prior chunks included")
+    if block_reduce_fn is not None:
+        if block_size is None:
+            raise ValueError(
+                "block_reduce_fn (overlapped reduce) requires block_size: "
+                "the per-block collective needs blocks to hide behind")
+        if init is not None:
+            raise ValueError(
+                "init cannot be combined with block_reduce_fn: a prior-"
+                "chunk carry is shard-local, the overlapped carry is "
+                "already reduced")
+        force_scan = True
     if block_size is None or (n_k <= block_size and not force_scan):
         # Single block (or streaming disabled) — no scan machinery needed.
         # With batch_blocks set this is the nb == 1 degenerate case: the
@@ -295,13 +336,15 @@ def partial_stats_chunked(
     # residuals trip shard_map's residual promotion on some JAX versions
     # when the chunked map runs (and is differentiated) inside the
     # distributed engine.
-    def body(carry, xs_t):
+    def _block_of(xs_t):
         if s is None:
             yc, muc, wc = xs_t
-            st = block_stats(yc, muc, None, wc)
-        else:
-            yc, muc, sc, wc = xs_t
-            st = block_stats(yc, muc, sc, wc)
+            return block_stats(yc, muc, None, wc)
+        yc, muc, sc, wc = xs_t
+        return block_stats(yc, muc, sc, wc)
+
+    def body(carry, xs_t):
+        st = _block_of(xs_t)
         return Stats(*(c + jnp.atleast_1d(t) for c, t in zip(carry, st))), None
 
     # Carry init matches one block's output dtypes exactly (abstract eval —
@@ -310,6 +353,41 @@ def partial_stats_chunked(
     # so continuing a scan here adds the same bits the one-shot scan would.
     shapes = jax.eval_shape(
         block_stats, y_b[0], mu_b[0], None if s is None else s_b[0], w_b[0])
+
+    if block_reduce_fn is not None:
+        zero = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
+
+        def _fold_reduced(acc, raw):
+            red = block_reduce_fn(raw)
+            return Stats(*(a + jnp.atleast_1d(t) for a, t in zip(acc, red)))
+
+        if reduce_buffered:
+            # Double buffer: step t folds the reduction of block t-1's
+            # pending Stats (no data dependence on block t's compute) and
+            # parks block t's raw Stats as the new pending; a post-scan
+            # flush reduces the last block.  The fold order over real
+            # blocks is identical to the eager path's — the initial
+            # pending is exact zeros and x + 0.0 == x bitwise — so the
+            # two schedules produce bit-identical Stats.
+            def body_ov(carry, xs_t):
+                acc, pending = carry
+                st = _block_of(xs_t)
+                acc = _fold_reduced(acc, pending)
+                pending = Stats(*(jnp.atleast_1d(t) for t in st))
+                return (acc, pending), None
+
+            (acc, pending), _ = jax.lax.scan(body_ov, (zero, zero), xs)
+            acc = _fold_reduced(acc, pending)
+        else:
+            def body_ev(acc, xs_t):
+                st = _block_of(xs_t)
+                st = Stats(*(jnp.atleast_1d(t) for t in st))
+                return _fold_reduced(acc, st), None
+
+            acc, _ = jax.lax.scan(body_ev, zero, xs)
+        out = Stats(*(t.reshape(sh.shape) for t, sh in zip(acc, shapes)))
+        return out.scale(scale) if scale != 1.0 else out
+
     if init is None:
         carry0 = Stats(*(jnp.zeros(t.shape or (1,), t.dtype) for t in shapes))
     else:

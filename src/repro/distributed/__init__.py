@@ -1,2 +1,4 @@
 from . import sharding
 from . import fault
+from . import async_stats
+from .async_stats import AsyncEngine, AsyncStatsAccumulator

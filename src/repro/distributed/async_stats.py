@@ -1,0 +1,396 @@
+"""Asynchronous stale-update accumulation for the Map-Reduce ELBO.
+
+The paper's reduce is a barrier: every shard's partial Stats must arrive
+before the global step runs.  But the statistics are a plain sum over
+points, so the reduce tolerates *stale* contributions: keep each shard's
+latest partial Stats in an accumulator and let the global step fold
+whatever is there — shards refresh on their own schedule, stragglers and
+failed nodes simply leave old (or no) contributions behind.  This is the
+Peng et al. 2017 "Asynchronous Distributed Variational GP" execution
+model (PAPERS.md) applied to Gal et al.'s collapsed-bound statistics.
+
+Two pieces:
+
+  * :class:`AsyncStatsAccumulator` — the bookkeeping.  Each member shard
+    holds one (Stats, stamp, rows) entry; a running total is maintained
+    incrementally with the w-linear ``fold_stats`` / ``downdate_stats``
+    identities (O(m²+md) per push/leave event — never a rescan of the
+    membership).  Reads enforce a bounded staleness S (older entries are
+    downdated out) and reweight the surviving fold so its expectation is
+    the exact Stats:
+
+      - ``"drop"``    — paper §5.2: surviving sums as-is (noisy).
+      - ``"rescale"`` — row-count n/n_live reweighting (the same factor
+        the in-mesh ``failure_mode="rescale"`` and the fixed
+        ``fault.apply_gradient_masking`` use): exact whenever per-row
+        statistics are exchangeable across shards, and exactly unbiased
+        when the missing set is row-uniform.
+      - ``"probs"``   — Horvitz–Thompson: shard k's contribution is
+        scaled by 1/p_k at push time, where p_k is its probability of
+        being present in the fold.  E[fold] = exact Stats *identically*
+        over the presence distribution — the property the
+        subset-enumeration test (tests/test_async_stats.py) checks.
+
+  * :class:`AsyncEngine` — a host-level barrier-free step driver over K
+    single-device shard workers (the same single-host simulation idiom
+    as ``fault.StepTimer.time_shards`` / benchmarks/gp_common).  Each
+    step refreshes only ``refresh`` alive shards (round-robin; a
+    ``fault.FailureSimulator`` vetoes dead ones), folds the rest stale,
+    and recovers the gradient through the stats cotangent: the collapsed
+    bound's grad wrt the folded Stats is one replicated O(m³)
+    value_and_grad, and each refreshed shard recomputes its
+    ``<d stats_k / d(hyp, z), ct>`` contribution — unrefreshed shards
+    reuse their cached (stale-ct) contribution, the classic stale-
+    gradient async scheme.  Per-step map cost is O(refresh · n_k m²)
+    instead of O(K · n_k m²): the step-speedup ``benchmarks.run --only
+    async`` gates on.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bound import collapsed_bound
+from ..core.stats import Stats, downdate_stats, fold_stats, partial_stats_chunked
+
+Array = jax.Array
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def _tree_scale(a, c):
+    return jax.tree.map(lambda t: t * c, a)
+
+
+@dataclass
+class _Entry:
+    stats: Stats          # as folded into the running total (probs: pre-scaled)
+    stamp: int
+    rows: float
+    prob: float
+
+
+class AsyncStatsAccumulator:
+    """Barrier-free Stats accumulator with bounded staleness + reweighting.
+
+    Args:
+      staleness: the bound S — at :meth:`read` with stamp t, entries with
+        ``stamp < t - S`` are evicted (downdated from the running total;
+        the shard stays a member and may push again).  ``S=0`` keeps only
+        contributions pushed at the read stamp itself.
+      reweight: ``"drop"`` | ``"rescale"`` | ``"probs"`` (module docstring).
+
+    Membership is elastic: :meth:`push` with a new shard id joins it,
+    :meth:`leave` downdates its contribution and removes it — both are a
+    single ``fold_stats`` / ``downdate_stats`` on the running total, so a
+    churn event costs O(m²+md) regardless of the membership size.
+    """
+
+    def __init__(self, staleness: int = 1, reweight: str = "drop"):
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        if reweight not in ("drop", "rescale", "probs"):
+            raise ValueError(
+                f"reweight must be 'drop', 'rescale' or 'probs', got {reweight!r}")
+        self.staleness = staleness
+        self.reweight = reweight
+        self._entries: dict[Any, _Entry] = {}
+        self._total: Stats | None = None
+
+    # -- membership ---------------------------------------------------------
+    def members(self) -> list:
+        return list(self._entries)
+
+    def __contains__(self, shard) -> bool:
+        return shard in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _fold(self, st: Stats):
+        self._total = st if self._total is None else fold_stats(self._total, st)
+
+    def _downdate(self, st: Stats):
+        self._total = downdate_stats(self._total, st)
+
+    def push(self, shard, stats: Stats, *, stamp: int, rows: float | None = None,
+             prob: float = 1.0):
+        """Replace ``shard``'s contribution (joining it if new).
+
+        ``rows``: live row count behind this contribution (defaults to
+        ``stats.n`` — correct for exact unweighted maps; pass explicitly
+        when ``stats`` is SVI-reweighted, whose ``n`` leaf is stochastic).
+        ``prob``: presence probability for ``reweight="probs"`` — the
+        contribution is folded pre-scaled by 1/prob so the running total
+        is the Horvitz–Thompson estimator at all times.
+        """
+        if rows is None:
+            rows = float(stats.n)
+        if not (0.0 < prob <= 1.0):
+            raise ValueError(f"prob must be in (0, 1], got {prob}")
+        if self.reweight == "probs" and prob != 1.0:
+            stats = stats.scale(1.0 / prob)
+        old = self._entries.get(shard)
+        if old is not None:
+            self._downdate(old.stats)
+        self._entries[shard] = _Entry(stats, int(stamp), float(rows), prob)
+        self._fold(stats)
+
+    def leave(self, shard):
+        """Elastic departure: downdate the shard's contribution and drop it."""
+        entry = self._entries.pop(shard, None)
+        if entry is not None:
+            self._downdate(entry.stats)
+
+    # -- read ----------------------------------------------------------------
+    def evict_stale(self, stamp: int) -> list:
+        """Downdate entries older than the staleness bound at ``stamp``.
+        Never empties the accumulator: if every entry has expired, the
+        freshest stamp's entries are kept (the accumulator analogue of
+        ``FailureSimulator``'s never-all-dead invariant — a fold of
+        nothing has no gradient signal at all).  Returns evicted ids."""
+        cut = stamp - self.staleness
+        expired = [k for k, e in self._entries.items() if e.stamp < cut]
+        if expired and len(expired) == len(self._entries):
+            newest = max(e.stamp for e in self._entries.values())
+            expired = [k for k in expired
+                       if self._entries[k].stamp < newest]
+        for k in expired:
+            self.leave(k)
+        return expired
+
+    def rows_live(self) -> float:
+        return sum(e.rows for e in self._entries.values())
+
+    def read(self, stamp: int, n_rows: float | None = None) -> Stats:
+        """The reweighted fold of all fresh-enough contributions.
+
+        Evicts entries staler than S first.  ``n_rows`` (the full-data row
+        count) is required for ``reweight="rescale"``: the fold's sums are
+        scaled by ``n_rows / rows_live`` and its ``n`` leaf set to
+        ``n_rows`` — exactly the in-mesh rescale handling.  The other
+        modes return the (HT-weighted) running total as-is.
+        """
+        self.evict_stale(stamp)
+        if not self._entries:
+            raise ValueError("read on an empty accumulator: no shard has "
+                             "pushed a contribution yet")
+        total = self._total
+        if self.reweight == "rescale":
+            if n_rows is None:
+                raise ValueError("reweight='rescale' needs n_rows (the "
+                                 "full-data row count) at read time")
+            live = self.rows_live()
+            f = n_rows / live
+            total = Stats(A=total.A * f, B=total.B * f, C=total.C * f,
+                          D=total.D * f, KL=total.KL * f,
+                          n=jnp.asarray(n_rows, dtype=jnp.asarray(total.n).dtype))
+        return total
+
+
+class AsyncEngine:
+    """Barrier-free async training step over K host-simulated shards.
+
+    Args:
+      shards: list of per-shard data dicts ``{"y": (n_k, d), "mu": (n_k, q),
+        optional "s": (n_k, q), optional "w": (n_k,)}`` — ragged row counts
+        allowed (this is what elastic membership produces).
+      d: output dimension (bound argument).
+      staleness / reweight: accumulator policy (S, and drop/rescale/probs).
+      refresh: shards refreshed per step (round-robin over alive shards).
+      failure: optional ``fault.FailureSimulator`` — dead shards skip
+        their refresh slot this step (their last contribution goes stale
+        and is eventually evicted; rescue is automatic on resurrection).
+      timer: optional ``fault.StepTimer`` — records per-refreshed-shard
+        wall times each step (ragged by design when ``refresh`` varies
+        with the alive set — the fixed ``StepTimer`` handles that).
+      chunk_size: per-shard scan block size (None = monolithic map).
+      batch_blocks: per-shard SVI block subsample (requires chunk_size) —
+        refreshed shards push reweighted stochastic Stats; pass a fresh
+        ``key`` to :meth:`step`.
+      latent / kernel: as on ``DistributedGP``.
+      clip: optional global-norm bound on the returned gradient.  Folds
+        that mix stats from different (hyp, z) can transiently break the
+        bound's Nyström-residual positivity and blow up the raw gradient
+        (a real stale-update failure mode, not a numerics bug) — for
+        plain SGD on the async step, set ``clip`` to roughly the exact
+        gradient's norm scale.  ``None`` (default) returns the raw
+        gradient: bitwise-identical to the reference when all shards are
+        fresh.
+
+    ``step(hyp, z, key=None)`` returns ``(neg_bound, (g_hyp, g_z))`` from
+    the folded (partially stale) Stats; gradients are recovered via the
+    stats cotangent (module docstring).  ``exact_value_and_grad`` is the
+    all-fresh reference the tests compare against.
+    """
+
+    def __init__(self, shards, d: int, *, staleness: int = 2,
+                 reweight: str = "drop", refresh: int = 1,
+                 failure=None, timer=None, chunk_size: int | None = None,
+                 batch_blocks: int | None = None, latent: bool = False,
+                 kernel=None, clip: float | None = None):
+        if refresh < 1:
+            raise ValueError(f"refresh must be >= 1, got {refresh}")
+        if clip is not None and not clip > 0:
+            raise ValueError(f"clip must be positive, got {clip}")
+        from ..core.covariance import as_kernel
+        self.shards = list(shards)
+        self.d = d
+        self.refresh = refresh
+        self.failure = failure
+        self.timer = timer
+        self.chunk_size = chunk_size
+        self.batch_blocks = batch_blocks
+        self.latent = latent
+        self.clip = clip
+        self.kernel = as_kernel(kernel)
+        self.acc = AsyncStatsAccumulator(staleness=staleness, reweight=reweight)
+        self.n_full = float(sum(self._rows(s) for s in self.shards))
+        self._grads: dict[int, Any] = {}     # shard -> (g_hyp, g_z) at last ct
+        self._rr = itertools.cycle(range(len(self.shards)))
+        self._step = 0
+        self._collapse_vg = jax.jit(jax.value_and_grad(
+            self._neg_collapse, argnums=(0, 1, 2)))
+        self._stats_jit = jax.jit(self._local_stats,
+                                  static_argnames=("exact",))
+        self._ip_vg = jax.jit(jax.value_and_grad(self._ip, argnums=(0, 1)))
+
+    @staticmethod
+    def _rows(shard) -> float:
+        w = shard.get("w")
+        if w is not None:
+            import numpy as np
+            return float(np.sum(w))
+        return float(shard["y"].shape[0])
+
+    # -- jitted pieces -------------------------------------------------------
+    def _local_stats(self, hyp, z, y, mu, s, w, key=None, exact=False) -> Stats:
+        return partial_stats_chunked(
+            hyp, z, y, mu, s, weights=w, latent=self.latent,
+            block_size=self.chunk_size, kernel=self.kernel,
+            batch_blocks=None if exact else self.batch_blocks, key=key)
+
+    def _neg_collapse(self, hyp, z, st):
+        # n-handling mirrors the in-mesh failure modes: drop's n leaf is
+        # the sum over LIVE contributions (a self-consistent bound of the
+        # present subset — full n against partial sums skews the noise
+        # terms and destabilises log_beta); rescale/probs already fixed
+        # up n at read/push time.
+        return -collapsed_bound(hyp, z, st, self.d, kernel=self.kernel)
+
+    def _ip(self, hyp, z, y, mu, s, w, ct, key=None):
+        # key=None replays the exact scan (the reference path); with a key
+        # the SVI subsample is re-drawn from the SAME per-shard key the
+        # stats push used, so the gradient matches the pushed estimate.
+        st = self._local_stats(hyp, z, y, mu, s, w, key=key,
+                               exact=key is None)
+        return sum(jnp.vdot(a, b) for a, b in zip(st, ct))
+
+    # -- the async step ------------------------------------------------------
+    def _alive(self):
+        if self.failure is None:
+            return [True] * len(self.shards)
+        return [m > 0 for m in self.failure.mask()]
+
+    def _pick_refresh(self, alive) -> list[int]:
+        picked, seen = [], 0
+        while len(picked) < self.refresh and seen < len(self.shards):
+            k = next(self._rr)
+            seen += 1
+            if alive[k] and k not in picked:
+                picked.append(k)
+        return picked
+
+    def _push_shard(self, k: int, stamp: int, key=None):
+        sh = self.shards[k]
+        skey = None if key is None else jax.random.fold_in(key, k)
+        st = self._stats_jit(self.hyp, self.z, sh["y"], sh["mu"],
+                             sh.get("s"), sh.get("w"), key=skey)
+        self.acc.push(k, st, stamp=stamp, rows=self._rows(sh))
+        return skey
+
+    def step(self, hyp, z, key=None):
+        """One barrier-free step at the current (hyp, z).  Returns
+        ``(neg_bound, (g_hyp, g_z))`` — both computed from the folded
+        Stats, with ``refresh`` shards' contributions fresh and the rest
+        stale up to S steps (older ones evicted)."""
+        self.hyp, self.z = hyp, z
+        t = self._step
+        self._step += 1
+        alive = self._alive()
+        picked = self._pick_refresh(alive)
+
+        skeys = {}
+        thunks = [lambda k=k: skeys.__setitem__(k, self._push_shard(k, t, key))
+                  for k in picked]
+        if self.timer is not None and thunks:
+            self.timer.time_shards(thunks)
+        else:
+            for fn in thunks:
+                fn()
+
+        st = self.acc.read(t, n_rows=self.n_full)
+        val, (gh_d, gz_d, ct) = self._collapse_vg(hyp, z, st)
+
+        # Second pass (refreshed shards only): the chain-rule contribution
+        # <d stats_k / d(hyp, z), ct> at the CURRENT cotangent; the others
+        # reuse their cached stale-ct contribution.
+        for k in picked:
+            sh = self.shards[k]
+            _, g = self._ip_vg(hyp, z, sh["y"], sh["mu"], sh.get("s"),
+                               sh.get("w"), ct, key=skeys.get(k))
+            self._grads[k] = g
+        members = [k for k in self.acc.members() if k in self._grads]
+        gsum = None
+        for k in members:
+            gsum = self._grads[k] if gsum is None else _tree_add(
+                gsum, self._grads[k])
+        if gsum is not None:
+            if self.acc.reweight == "rescale":
+                gsum = _tree_scale(gsum, self.n_full / self.acc.rows_live())
+            # ct is d(-F)/d(stats): the shard contributions already carry
+            # the negative sign — add them to the direct term.
+            gh_d = _tree_add(gh_d, gsum[0])
+            gz_d = gz_d + gsum[1]
+        if self.clip is not None:
+            # Stale folds mix stats computed at different (hyp, z); the
+            # collapsed bound's Nyström-residual terms can then transiently
+            # flip sign and the raw gradient runs away through log_beta
+            # (tests/test_async_stats.py pins the stabilized descent).
+            # Global-norm clipping bounds the per-step parameter motion —
+            # and with it the staleness window's theta span — which is the
+            # standard stale-gradient stabilizer.
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                              for g in jax.tree.leaves((gh_d, gz_d))))
+            c = jnp.minimum(1.0, self.clip / (gn + 1e-30))
+            gh_d = _tree_scale(gh_d, c)
+            gz_d = gz_d * c
+        return val, (gh_d, gz_d)
+
+    # -- reference -----------------------------------------------------------
+    def exact_value_and_grad(self, hyp, z):
+        """The all-fresh (synchronous) value/grad over every shard — the
+        reference the async step converges to when refresh >= K and S
+        covers the round.  Bypasses the accumulator entirely."""
+        total = None
+        for sh in self.shards:
+            st = self._stats_jit(hyp, z, sh["y"], sh["mu"], sh.get("s"),
+                                 sh.get("w"), exact=True)
+            total = st if total is None else fold_stats(total, st)
+        val, (gh, gz, ct) = self._collapse_vg(hyp, z, total)
+        for sh in self.shards:
+            _, g = self._ip_vg(hyp, z, sh["y"], sh["mu"], sh.get("s"),
+                               sh.get("w"), ct)
+            gh = _tree_add(gh, g[0])
+            gz = gz + g[1]
+        return val, (gh, gz)

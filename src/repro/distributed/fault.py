@@ -25,35 +25,63 @@ import numpy as np
 
 
 class FailureSimulator:
-    """Bernoulli node-failure process at ``rate`` per iteration per node."""
+    """Bernoulli node-failure process at ``rate`` per iteration per node.
 
-    def __init__(self, n_shards: int, rate: float, seed: int = 0):
+    ``dtype`` is the mask dtype (default float64).  The distributed engine
+    folds the mask into the per-row weights, so callers running an f32
+    weight path should request ``dtype=np.float32`` explicitly rather
+    than rely on an implicit downcast at the fold.
+    """
+
+    def __init__(self, n_shards: int, rate: float, seed: int = 0,
+                 dtype=np.float64):
         self.n_shards = n_shards
         self.rate = rate
+        self.dtype = np.dtype(dtype)
         self._rng = np.random.default_rng(seed)
 
     def mask(self) -> np.ndarray:
-        """1.0 = alive, 0.0 = failed this iteration."""
+        """1.0 = alive, 0.0 = failed this iteration.  At least one shard
+        is always alive — even at ``rate=1.0`` (never-all-dead
+        invariant; a fully-dead iteration has no statistics to reduce)."""
         alive = self._rng.uniform(size=self.n_shards) >= self.rate
         if not alive.any():          # never lose every shard
             alive[self._rng.integers(self.n_shards)] = True
-        return alive.astype(np.float64)
+        return alive.astype(self.dtype)
 
 
 def apply_gradient_masking(grad_shards: list, mask: np.ndarray,
-                           mode: str = "drop"):
+                           mode: str = "drop", rows=None):
     """Combine per-shard gradients under failures.
 
     grad_shards: list of pytrees (one per shard); returns the summed tree.
+    rows: per-shard live row counts (len == len(grad_shards)).  None
+      assumes equal-sized shards.
     drop    — paper: sum surviving shards (noisy gradient).
-    rescale — beyond-paper: scale by n/n_live (approx. unbiased).
+    rescale — beyond-paper: scale by n/n_live, the ROW-count ratio — the
+      factor ``core.distributed``'s in-mesh rescale uses.  With ``rows``
+      omitted the shards are assumed equal-sized, where the row ratio
+      reduces to the shard-count ratio; pass ``rows`` whenever shards are
+      ragged (e.g. the final shard after ``pad_and_shard``), otherwise
+      the rescale is biased.
     """
     import jax
 
     alive = [g for g, m in zip(grad_shards, mask) if m > 0]
+    if not alive:
+        raise ValueError("all shards masked dead: nothing to combine")
     total = jax.tree.map(lambda *xs: sum(xs), *alive)
     if mode == "rescale":
-        c = len(grad_shards) / max(len(alive), 1)
+        if rows is None:
+            c = len(grad_shards) / len(alive)
+        else:
+            rows = np.asarray(rows, np.float64)
+            if rows.shape != (len(grad_shards),):
+                raise ValueError(
+                    f"rows must have shape ({len(grad_shards)},), "
+                    f"got {rows.shape}")
+            n_live = float(sum(r for r, m in zip(rows, mask) if m > 0))
+            c = float(rows.sum()) / n_live
         total = jax.tree.map(lambda x: x * c, total)
     return total
 
@@ -65,21 +93,33 @@ class StepTimer:
     records: list = field(default_factory=list)
 
     def record(self, shard_times: list[float]):
-        self.records.append(list(shard_times))
+        """Append one iteration's per-shard wall times.  Iterations may
+        record different shard counts (elastic membership); an empty
+        iteration is rejected — it has no min/mean/max."""
+        times = list(shard_times)
+        if not times:
+            raise ValueError(
+                "record() needs at least one shard time: an iteration "
+                "with no live shards has no load distribution")
+        self.records.append(times)
 
     def summary(self) -> dict:
-        a = np.asarray(self.records)        # (iters, shards)
-        if a.size == 0:
+        # Per-row (per-iteration) reduces: rows may be ragged — differing
+        # shard counts under elastic membership — where np.asarray would
+        # build an object array and axis reduces raise.
+        if not self.records:
             return {}
+        mins = np.array([min(r) for r in self.records])
+        means = np.array([sum(r) / len(r) for r in self.records])
+        maxs = np.array([max(r) for r in self.records])
         return {
-            "min": float(a.min(axis=1).mean()),
-            "mean": float(a.mean(axis=1).mean()),
-            "max": float(a.max(axis=1).mean()),
+            "min": float(mins.mean()),
+            "mean": float(means.mean()),
+            "max": float(maxs.mean()),
             # rate-limiting overhead: how much the slowest shard exceeds
             # the mean (paper reports 3.7%)
             "straggler_overhead": float(
-                (a.max(axis=1) / np.maximum(a.mean(axis=1), 1e-12) - 1.0)
-                .mean()),
+                (maxs / np.maximum(means, 1e-12) - 1.0).mean()),
         }
 
     def time_shards(self, fns: list):

@@ -56,7 +56,7 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                        chunk_size: int | None = None,
                        kernel_backend: str = "xla",
                        batch_blocks: int | None = None, argnums=(0, 1),
-                       kernel=None):
+                       kernel=None, reduce_mode: str = "serial"):
     """Distributed GP map-reduce analogue of ``make_train_step``.
 
     Returns ``(engine, step)`` where ``step`` is the jitted
@@ -84,6 +84,12 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
     ``kernel`` (default None = SE-ARD) picks the covariance expression
     (``core.covariance``); ``hyp`` must then carry that expression's
     parameter tree (``init_utils.default_hyp_for`` builds one).
+
+    ``reduce_mode`` ("serial" default; "overlap" / "overlap_eager",
+    requires ``chunk_size``) selects the overlapped per-block reduce —
+    the collective for one scan block rides behind the next block's
+    compute instead of serialising after the whole map (see
+    ``core.distributed.DistributedGP``).
     """
     from ..core.distributed import DistributedGP
 
@@ -91,8 +97,42 @@ def make_gp_train_step(mesh, d: int, *, data_axes=("data",),
                         failure_mode=failure_mode, psi2_fn=psi2_fn,
                         reg_stats_fn=reg_stats_fn, chunk_size=chunk_size,
                         kernel_backend=kernel_backend,
-                        batch_blocks=batch_blocks, kernel=kernel)
+                        batch_blocks=batch_blocks, kernel=kernel,
+                        reduce_mode=reduce_mode)
     return eng, eng.make_value_and_grad(d, argnums=argnums)
+
+
+def make_gp_async_step(shards, d: int, *, staleness: int = 2,
+                       reweight: str = "drop", refresh: int = 1,
+                       failure=None, timer=None,
+                       chunk_size: int | None = None,
+                       batch_blocks: int | None = None,
+                       latent: bool = False, kernel=None,
+                       clip: float | None = None):
+    """Barrier-free async analogue of :func:`make_gp_train_step`.
+
+    Returns ``(engine, step)`` where ``engine`` is a
+    ``distributed.async_stats.AsyncEngine`` over host-simulated
+    ``shards`` (list of ``{"y", "mu", optional "s"/"w"}`` dicts, ragged
+    row counts allowed) and ``step(hyp, z, key=None) -> (neg_bound,
+    (g_hyp, g_z))``.  Each step refreshes only ``refresh`` alive shards
+    (round-robin; ``failure`` — a ``fault.FailureSimulator`` — vetoes
+    dead ones) and folds the others' stale contributions, bounded at
+    ``staleness`` steps and reweighted per ``reweight``
+    ("drop"/"rescale"/"probs" — see ``distributed.async_stats``).
+    Per-step map cost is O(refresh · n_k m²) instead of O(K · n_k m²).
+
+    ``clip`` bounds the returned gradient's global norm — recommended for
+    plain SGD on stale folds (see ``AsyncEngine``); ``None`` returns raw
+    gradients.
+    """
+    from ..distributed.async_stats import AsyncEngine
+
+    eng = AsyncEngine(shards, d, staleness=staleness, reweight=reweight,
+                      refresh=refresh, failure=failure, timer=timer,
+                      chunk_size=chunk_size, batch_blocks=batch_blocks,
+                      latent=latent, kernel=kernel, clip=clip)
+    return eng, eng.step
 
 
 def make_gp_update_step(mesh, d: int, *, data_axes=("data",),

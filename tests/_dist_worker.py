@@ -183,6 +183,62 @@ def main():
     assert all(np.isfinite(np.asarray(g)).all()
                for g in jax.tree.leaves(gl_s))
 
+    # --- overlapped reduce (reduce_mode="overlap") -------------------------
+    # Serial psums the whole shard-local scan's Stats once; overlap psums
+    # each block's contribution inside the scan.  The two associate the
+    # cross-shard/cross-block float sums differently, so on 8 real shards
+    # they agree at tight f64 — NOT bitwise (that is mathematically
+    # impossible; the bitwise serial==overlap contract holds on 1-device
+    # meshes, tests/test_overlap_reduce.py).  Double-buffered "overlap" vs
+    # per-step "overlap_eager" is a pure scheduling change folding the same
+    # reduced values in the same order — THAT pair must be bitwise.
+    ov = {}
+    psums = {}
+    for mode in ("serial", "overlap", "overlap_eager"):
+        eng_m = DistributedGP(mesh, data_axes=("data", "model"),
+                              latent=False, chunk_size=4, reduce_mode=mode)
+        vg_m = eng_m.make_value_and_grad(d, argnums=(0, 1))
+        ov[mode] = vg_m(hyp, jnp.asarray(z), data_c["mu"], None,
+                        data_c["y"], w_c, ones, nf)
+        psums[mode] = str(jax.make_jaxpr(eng_m.bound_fn(d))(
+            hyp, jnp.asarray(z), data_c["y"], data_c["mu"], None, w_c,
+            ones, nf)).count("psum")
+    v_ser, (gh_ser, gz_ser) = ov["serial"]
+    v_ovl, (gh_ovl, gz_ovl) = ov["overlap"]
+    assert abs(float(v_ovl) - float(v_ser)) <= 1e-12 * abs(float(v_ser))
+    np.testing.assert_allclose(np.asarray(gz_ovl), np.asarray(gz_ser),
+                               rtol=1e-10, atol=1e-12)
+    for k2 in gh_ser:
+        np.testing.assert_allclose(np.asarray(gh_ovl[k2]),
+                                   np.asarray(gh_ser[k2]),
+                                   rtol=1e-10, atol=1e-12)
+    v_egr, (gh_egr, gz_egr) = ov["overlap_eager"]
+    assert float(v_ovl) == float(v_egr), "double-buffer broke bitwise parity"
+    np.testing.assert_array_equal(np.asarray(gz_ovl), np.asarray(gz_egr))
+    for k2 in gh_ovl:
+        np.testing.assert_array_equal(np.asarray(gh_ovl[k2]),
+                                      np.asarray(gh_egr[k2]))
+    # Collective structure: serial = ONE psum per Stats leaf after the map;
+    # eager = the same six, relocated into the scan body; buffered overlap
+    # adds the post-scan flush of the last pending block — six more.
+    assert psums["serial"] == 6, psums
+    assert psums["overlap_eager"] == 6, psums
+    assert psums["overlap"] == 12, psums
+    # Latent path + full-batch SVI ride the same restructured scan.
+    engl_ov = DistributedGP(mesh, data_axes=("data", "model"), latent=True,
+                            chunk_size=4, reduce_mode="overlap")
+    vl_ov, _ = engl_ov.make_value_and_grad(d, argnums=(0, 1, 2, 3))(
+        hyp, jnp.asarray(z), datal_c["mu"], datal_c["s"], datal_c["y"],
+        wl_c, jnp.ones((engl_ov.n_shards,)), nf)
+    assert abs(float(vl_ov) - float(vl_c)) <= 1e-12 * abs(float(vl_c))
+    eng_svi_ov = DistributedGP(mesh, data_axes=("data", "model"),
+                               latent=False, chunk_size=4, batch_blocks=4,
+                               reduce_mode="overlap")
+    v_svi_ov, _ = eng_svi_ov.make_value_and_grad(d, argnums=(0, 1))(
+        hyp, jnp.asarray(z), data_s["mu"], None, data_s["y"], w_s, ones,
+        nf, jax.random.PRNGKey(0))
+    assert abs(float(v_svi_ov) - float(v_sf)) <= 1e-12 * abs(float(v_sf))
+
     # --- serving: sharded block predict on the mesh ------------------------
     # State extracted via the distributed exact map-reduce must equal the
     # sequential extraction, and the mesh-sharded block engine must match

@@ -74,6 +74,51 @@ def test_masking_rescale_is_drop_times_n_over_nlive(rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_mask_dtype_threaded_and_rate1_property(dtype):
+    """Explicit mask dtype is honored, and the never-all-dead invariant
+    holds under the worst case rate=1.0 for every seed (property test):
+    exactly one resurrected survivor, still in the requested dtype."""
+    for seed in range(40):
+        sim = FailureSimulator(n_shards=7, rate=1.0, seed=seed, dtype=dtype)
+        for _ in range(5):
+            m = sim.mask()
+            assert m.dtype == np.dtype(dtype)
+            assert set(np.unique(m)) <= {0.0, 1.0}
+            assert m.sum() == 1.0      # all die, one is resurrected
+    # default stays float64 (back-compat with the f64 weight path)
+    assert FailureSimulator(3, 0.5).mask().dtype == np.float64
+
+
+def test_masking_rescale_ragged_rows_matches_in_mesh(rng):
+    """Regression for the shard-count rescale bug: with ragged shards the
+    factor must be the ROW ratio n/n_live — the same factor the in-mesh
+    ``failure_mode='rescale'`` path applies — not the shard-count ratio."""
+    shards = _grad_shards(rng, n_shards=4)
+    rows = np.array([8.0, 8.0, 8.0, 3.0])   # ragged final shard
+    mask = np.array([1.0, 1.0, 0.0, 1.0])
+    drop = apply_gradient_masking(shards, mask, mode="drop")
+    resc = apply_gradient_masking(shards, mask, mode="rescale", rows=rows)
+    c = rows.sum() / (rows * mask).sum()     # n / n_live — in-mesh factor
+    for a, b in zip(jax.tree.leaves(resc), jax.tree.leaves(drop)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b) * c,
+                                   rtol=1e-15)
+    # shard-count factor would be 4/3 — assert the bug is actually gone
+    assert not np.isclose(c, len(shards) / mask.sum())
+    # equal rows: row ratio degenerates to the (previously hardcoded)
+    # shard-count ratio, so rows=None keeps its old equal-shard meaning
+    eq = np.full(4, 5.0)
+    r1 = apply_gradient_masking(shards, mask, mode="rescale", rows=eq)
+    r2 = apply_gradient_masking(shards, mask, mode="rescale")
+    for a, b in zip(jax.tree.leaves(r1), jax.tree.leaves(r2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-15)
+    with pytest.raises(ValueError, match="rows must have shape"):
+        apply_gradient_masking(shards, mask, mode="rescale",
+                               rows=np.ones(3))
+    with pytest.raises(ValueError, match="all shards masked dead"):
+        apply_gradient_masking(shards, np.zeros(4), mode="drop")
+
+
 def test_step_timer_summary():
     t = StepTimer()
     assert t.summary() == {}
@@ -85,3 +130,23 @@ def test_step_timer_summary():
     np.testing.assert_allclose(s["straggler_overhead"], (0.5 + 0.0) / 2)
     outs = t.time_shards([lambda: 1, lambda: 2])
     assert outs == [1, 2] and len(t.records) == 3
+
+
+def test_step_timer_ragged_records():
+    """Elastic membership records different shard counts per iteration —
+    summary must reduce per row instead of crashing on the object array
+    np.asarray builds from ragged lists."""
+    t = StepTimer()
+    t.record([1.0, 2.0, 3.0])
+    t.record([4.0])                       # one surviving shard
+    t.record([2.0, 4.0])
+    s = t.summary()
+    np.testing.assert_allclose(s["min"], (1.0 + 4.0 + 2.0) / 3)
+    np.testing.assert_allclose(s["max"], (3.0 + 4.0 + 4.0) / 3)
+    np.testing.assert_allclose(s["mean"], (2.0 + 4.0 + 3.0) / 3)
+    np.testing.assert_allclose(
+        s["straggler_overhead"],
+        ((3.0 / 2.0 - 1) + 0.0 + (4.0 / 3.0 - 1)) / 3)
+    with pytest.raises(ValueError, match="at least one shard time"):
+        t.record([])
+    assert len(t.records) == 3            # the rejected row was not kept

@@ -1,0 +1,196 @@
+"""Overlapped per-block reduce (reduce_mode="overlap"): parity contracts.
+
+What is provable, and what is asserted:
+
+  * With an IDENTITY reduce hook, the overlapped scan folds exactly the
+    same per-block values in exactly the same order as the serial scan —
+    so ``block_reduce_fn=identity`` must be BITWISE equal to the plain
+    chunked scan, buffered or eager (the double buffer only re-times the
+    fold: its initial pending slot is exact zeros and x + 0.0 == x).
+  * On a ONE-device mesh the psum is the identity, so
+    ``reduce_mode="overlap"`` must be bitwise equal to ``"serial"`` —
+    bound AND grads — across backends, the latent path, and SVI.
+  * On a multi-device mesh, serial (``psum(sum_t st_t)``) and overlapped
+    (``sum_t psum(st_t)``) associate the cross-shard/cross-block float
+    sums differently — bitwise equality is impossible there, and the
+    8-device section in tests/_dist_worker.py pins tight f64 closeness
+    plus the bitwise ``overlap == overlap_eager`` scheduling contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import DistributedGP
+from repro.core.stats import Stats, partial_stats_chunked
+from repro.launch.mesh import make_compat_mesh
+
+from conftest import make_regression
+
+
+def _mk_hyp(q):
+    return {"log_sf2": jnp.asarray(0.2), "log_ell": jnp.full((q,), 0.1),
+            "log_beta": jnp.asarray(1.0)}
+
+
+def _assert_stats_bitwise(a, b):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("latent", [False, True])
+@pytest.mark.parametrize("buffered", [True, False])
+def test_identity_reduce_bitwise_equals_plain_scan(rng, latent, buffered):
+    """block_reduce_fn=identity folds the same values in the same order as
+    the serial scan — bitwise, including the padded final block."""
+    n, m, q, d, block = 53, 6, 2, 3, 8          # nb = 7, last block padded
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, d)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    s = jnp.asarray(rng.uniform(0.05, 0.6, (n, q))) if latent else None
+    hyp = _mk_hyp(q)
+
+    plain = partial_stats_chunked(hyp, z, y, x, s=s, latent=latent,
+                                  block_size=block, force_scan=True)
+    ov = partial_stats_chunked(hyp, z, y, x, s=s, latent=latent,
+                               block_size=block,
+                               block_reduce_fn=lambda st: st,
+                               reduce_buffered=buffered)
+    _assert_stats_bitwise(plain, ov)
+
+
+def test_identity_reduce_bitwise_with_svi_subset(rng):
+    """The overlapped reduce composes with the SVI block subsample: the
+    sampled blocks are reduced as scanned and the nb/B reweighting applies
+    to the reduced accumulator — identical values, identical order."""
+    n, m, q, block, B = 41, 5, 2, 8, 3          # nb = 6
+    x = jnp.asarray(rng.standard_normal((n, q)))
+    y = jnp.asarray(rng.standard_normal((n, 2)))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    sub = jnp.asarray([0, 4, 2])
+
+    plain = partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                                  block_size=block, batch_blocks=B,
+                                  block_indices=sub, force_scan=True)
+    ov = partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                               block_size=block, batch_blocks=B,
+                               block_indices=sub,
+                               block_reduce_fn=lambda st: st)
+    _assert_stats_bitwise(plain, ov)
+
+
+def test_partial_stats_chunked_overlap_validation(rng):
+    y = jnp.asarray(rng.standard_normal((20, 1)))
+    x = jnp.asarray(rng.standard_normal((20, 2)))
+    hyp = _mk_hyp(2)
+    z = jnp.asarray(rng.standard_normal((4, 2)))
+    ident = lambda st: st
+    with pytest.raises(ValueError, match="requires block_size"):
+        partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                              block_size=None, block_reduce_fn=ident)
+    init = partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                                 block_size=4)
+    with pytest.raises(ValueError, match="init cannot be combined"):
+        partial_stats_chunked(hyp, z, y, x, s=None, latent=False,
+                              block_size=4, block_reduce_fn=ident,
+                              init=Stats(*(jnp.atleast_1d(t) for t in init)))
+
+
+def test_engine_reduce_mode_validation():
+    mesh = make_compat_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="reduce_mode must be"):
+        DistributedGP(mesh, chunk_size=4, reduce_mode="async")
+    with pytest.raises(ValueError, match="requires chunk_size"):
+        DistributedGP(mesh, reduce_mode="overlap")
+
+
+@pytest.mark.parametrize("latent", [False, True])
+def test_one_device_overlap_bitwise_equals_serial(rng, latent):
+    """psum on a 1-device mesh is the identity: overlap must reproduce the
+    serial bound and grads BIT FOR BIT — engine-level, both tiers."""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d, block = 37, 5, 2, 2, 8
+    x = rng.standard_normal((n, q))
+    y = rng.standard_normal((n, d))
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    s = rng.uniform(0.05, 0.6, (n, q)) if latent else None
+    hyp = _mk_hyp(q)
+    nf = jnp.asarray(float(n))
+    fm = jnp.ones((1,))
+
+    out = {}
+    for mode in ("serial", "overlap", "overlap_eager"):
+        eng = DistributedGP(mesh, latent=latent, chunk_size=block,
+                            reduce_mode=mode)
+        if latent:
+            data, w = eng.put_data(y=y, mu=x, s=s)
+            sv = data["s"]
+            argnums = (0, 1, 2, 3)
+        else:
+            data, w = eng.put_data(y=y, mu=x)
+            sv = None
+            argnums = (0, 1)
+        vg = eng.make_value_and_grad(d, argnums=argnums)
+        out[mode] = vg(hyp, z, data["mu"], sv, data["y"], w, fm, nf)
+
+    v0, g0 = out["serial"]
+    for mode in ("overlap", "overlap_eager"):
+        v, g = out[mode]
+        assert float(v) == float(v0), mode
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=mode)
+
+
+def test_one_device_overlap_bitwise_svi_and_rescale(rng):
+    """The overlap path under SVI sampling and the rescale failure mode —
+    same bitwise 1-device contract (the SVI key folding and the n/n_live
+    handling sit outside the reduce restructure)."""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d, block = 40, 4, 2, 1, 8
+    x, y = make_regression(rng, n=n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    nf = jnp.asarray(float(n))
+    key = jax.random.PRNGKey(3)
+
+    vals = {}
+    for mode in ("serial", "overlap"):
+        eng = DistributedGP(mesh, chunk_size=block, batch_blocks=2,
+                            failure_mode="rescale", reduce_mode=mode)
+        data, w = eng.put_data(y=y, mu=x)
+        v, (gh, gz) = eng.make_value_and_grad(d)(
+            hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf, key)
+        vals[mode] = (v, gh, gz)
+    assert float(vals["overlap"][0]) == float(vals["serial"][0])
+    np.testing.assert_array_equal(np.asarray(vals["overlap"][2]),
+                                  np.asarray(vals["serial"][2]))
+    for k in vals["serial"][1]:
+        np.testing.assert_array_equal(np.asarray(vals["overlap"][1][k]),
+                                      np.asarray(vals["serial"][1][k]))
+
+
+def test_one_device_overlap_pallas_backend(rng):
+    """kernel_backend='pallas' (interpret mode off-TPU) under the overlapped
+    reduce: the per-block hook output feeds the in-scan collective —
+    1-device bitwise parity against the pallas serial path."""
+    mesh = make_compat_mesh((1,), ("data",))
+    n, m, q, d, block = 33, 6, 2, 1, 8
+    x, y = make_regression(rng, n=n, q=q, d=d)
+    z = jnp.asarray(rng.standard_normal((m, q)))
+    hyp = _mk_hyp(q)
+    nf = jnp.asarray(float(n))
+
+    out = {}
+    for mode in ("serial", "overlap"):
+        eng = DistributedGP(mesh, chunk_size=block, kernel_backend="pallas",
+                            reduce_mode=mode)
+        data, w = eng.put_data(y=y, mu=x)
+        out[mode] = eng.make_value_and_grad(d)(
+            hyp, z, data["mu"], None, data["y"], w, jnp.ones((1,)), nf)
+    assert float(out["overlap"][0]) == float(out["serial"][0])
+    for a, b in zip(jax.tree.leaves(out["serial"][1]),
+                    jax.tree.leaves(out["overlap"][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
